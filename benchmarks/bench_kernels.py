@@ -1,0 +1,85 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp twin vs oracle.
+
+On this CPU host the interpret-mode numbers measure correctness-path
+overhead, not TPU speed — the derived columns (flops, arithmetic
+intensity) are the TPU-relevant part."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+
+
+def main() -> list[dict]:
+    rows = []
+    # flash attention
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.models.attention import chunked_attention
+    b, s, hq, hkv, d = 1, 512, 4, 2, 64
+    q = jax.random.normal(jax.random.key(1), (b, s, hq, d))
+    k = jax.random.normal(jax.random.key(2), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.key(3), (b, s, hkv, d))
+    t_kernel = timed(lambda: flash_attention(q, k, v, qblk=128, kblk=128))
+    t_jnp = timed(jax.jit(lambda a, b_, c: chunked_attention(
+        a, b_, c, q_chunk=128, kv_chunk=128)), q, k, v)
+    flops = 4.0 * b * hq * s * s * d / 2
+    rows.append({"name": "kernel_flash_attention_interp",
+                 "us_per_call": t_kernel, "jnp_twin_us": t_jnp,
+                 "flops": flops,
+                 "ai_flops_per_byte": flops / (3 * b * s * hq * d * 4)})
+
+    # gbt histogram
+    from repro.kernels.gbt_hist.kernel import grad_histogram_kernel
+    from repro.kernels.gbt_hist.ref import grad_histogram_ref
+    import time
+    n, f, bins = 4096, 19, 64
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, bins, size=(n, f)), jnp.int32)
+    grad = jnp.asarray(rng.normal(size=n), jnp.float32)
+    fn = jax.jit(lambda c, g: grad_histogram_kernel(c, g, bins))
+    t_kernel = timed(fn, codes, grad)
+    t0 = time.perf_counter()
+    grad_histogram_ref(np.asarray(codes), np.asarray(grad), bins)
+    t_np = (time.perf_counter() - t0) * 1e6
+    rows.append({"name": "kernel_gbt_hist_interp", "us_per_call": t_kernel,
+                 "numpy_ref_us": t_np, "rows": n, "features": f,
+                 "bins": bins})
+
+    # ssd scan
+    from repro.kernels.ssm_scan.ops import ssd_chunked_kernel
+    from repro.models.mamba2 import ssd_chunked
+    b2, s2, h2, p2, n2 = 1, 512, 4, 32, 32
+    x = jax.random.normal(jax.random.key(4), (b2, s2, h2, p2))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(5), (b2, s2, h2)))
+    bb = jax.random.normal(jax.random.key(6), (b2, s2, n2))
+    cc = jax.random.normal(jax.random.key(7), (b2, s2, n2))
+    a_log = jnp.zeros((h2,))
+    dsk = jnp.ones((h2,))
+    t_kernel = timed(lambda: ssd_chunked_kernel(x, dt, a_log, bb, cc, dsk,
+                                                chunk=128))
+    t_jnp = timed(jax.jit(lambda *a: ssd_chunked(*a, chunk=128)),
+                  x, dt, a_log, bb, cc, dsk)
+    rows.append({"name": "kernel_ssd_scan_interp", "us_per_call": t_kernel,
+                 "jnp_twin_us": t_jnp, "seq": s2, "heads": h2})
+
+    # int8 W8A16 matmul
+    from repro.kernels.int8_matmul.ops import int8_matmul
+    from repro.kernels.int8_matmul.ref import quantize
+    m3, k3, n3 = 256, 512, 512
+    w = np.asarray(jax.random.normal(jax.random.key(8), (k3, n3)))
+    w_q, scale = quantize(w)
+    x3 = jax.random.normal(jax.random.key(9), (m3, k3))
+    t_kernel = timed(lambda: int8_matmul(x3, jnp.asarray(w_q),
+                                         jnp.asarray(scale)))
+    t_jnp = timed(jax.jit(jnp.matmul), x3, jnp.asarray(w))
+    rows.append({"name": "kernel_int8_matmul_interp",
+                 "us_per_call": t_kernel, "f32_matmul_us": t_jnp,
+                 "weight_bytes_ratio": 0.25})
+    emit(rows, "kernels")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

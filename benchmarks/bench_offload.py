@@ -1,0 +1,78 @@
+"""Offloading-policy comparison (paper §II-C): latency per policy across
+link conditions, with the split point chosen by (a) analytic costs and
+(b) the trained GBT profiling model — the paper's end-to-end pipeline."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, profiling_dataset
+from repro.core import offload as off
+from repro.core.predictors import GBTRegressor
+from repro.core.workloads import WorkloadConfig
+from repro.hw import get_device
+
+LINKS = {"cell_poor": 0.125e9 / 64, "cell": 0.125e9 / 8, "wifi": 0.125e9,
+         "wired": 1.25e9}
+
+
+def main() -> list[dict]:
+    wc = WorkloadConfig("cnn", 2, epochs=5, optimiser="adam", lr=1e-3,
+                        batch_size=32)
+    layers = off.workload_layer_costs(wc)
+    rows = []
+    for link_name, bw in LINKS.items():
+        env = off.OffloadEnv(device=get_device("pi5-arm"),
+                             edge=get_device("edge-server-a100"),
+                             link_bw=bw, input_bytes=4 * 32 * 784)
+        pol = off.QLearningPolicy(layers, env, episodes=4000).train()
+        decisions = {
+            "local": off.local_only(layers, env),
+            "remote": off.remote_only(layers, env),
+            "greedy": off.greedy_split(layers, env),
+            "optimal": off.optimal_split(layers, env),
+            "qlearning": pol.decide(bw),
+        }
+        for name, d in decisions.items():
+            rows.append({
+                "name": f"offload_{link_name}_{name}",
+                "us_per_call": d.total_time_s * 1e6,
+                "split": d.split,
+                "transfer_s": d.transfer_time_s,
+            })
+
+    # predictor-driven split (profiling model in the loop)
+    records, data = profiling_dataset()
+    gbt = GBTRegressor(n_trees=150, max_depth=8)
+    # train on (log flops, log peak flops) -> step time
+    feats = np.stack([[np.log10(max(r.flops_per_step, 1)),
+                       np.log10(r.hardware["hw_peak_flops"])]
+                      for r in records]).astype(np.float32)
+    times = np.array([r.step_time_s for r in records])
+    gbt.fit(feats, times)
+
+    def predicted_time(lc: off.LayerCost, dev) -> float:
+        f = np.array([[np.log10(max(lc.flops, 1)),
+                       np.log10(dev.peak_flops)]], np.float32)
+        return float(max(gbt.predict(f)[0], 1e-9))
+
+    env = off.OffloadEnv(device=get_device("pi5-arm"),
+                         edge=get_device("edge-server-a100"),
+                         link_bw=LINKS["wifi"], input_bytes=4 * 32 * 784)
+    d_pred = off.optimal_split(layers, env, time_fn=predicted_time)
+    d_true = off.optimal_split(layers, env)
+    rows.append({
+        "name": "offload_predictor_driven",
+        "us_per_call": off.split_time(layers, d_pred.split,
+                                      env).total_time_s * 1e6,
+        "split_pred": d_pred.split,
+        "split_true": d_true.split,
+        "regret_pct": 100.0 * (
+            off.split_time(layers, d_pred.split, env).total_time_s
+            / d_true.total_time_s - 1.0),
+    })
+    emit(rows, "offload")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Roofline table (deliverable g): per (arch × shape) terms from the
+dry-run JSON — the source of EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit
+
+
+def main(path: str = "") -> list[dict]:
+    path = path or os.path.join(RESULTS_DIR, "dryrun_single_pod.json")
+    if not os.path.exists(path):
+        print(f"roofline,,skipped=no {path}; run repro.launch.dryrun first")
+        return []
+    with open(path) as f:
+        recs = json.load(f)
+    rows = []
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append({"name": f"roofline_{r['arch']}_{r['shape']}",
+                         "status": r["status"]})
+            continue
+        roof = r["roofline"]
+        bound = max(roof["compute_s"], roof["memory_s"],
+                    roof["collective_s"])
+        rows.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}",
+            "us_per_call": bound * 1e6,
+            "dominant": roof["dominant"],
+            "compute_s": roof["compute_s"],
+            "memory_s": roof["memory_s"],
+            "collective_s": roof["collective_s"],
+            "useful_ratio": roof["useful_ratio"],
+            "mem_gib_per_dev": r["bytes_per_device_tpu_adjusted"] / 2**30,
+            "fits_hbm16": r["fits_hbm16"],
+        })
+    emit(rows, "roofline")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

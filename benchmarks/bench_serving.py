@@ -1,0 +1,36 @@
+"""Serving throughput on reduced configs (substrate health check):
+prefill + decode tokens/s for three architecture families."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import reduced_config
+from repro.serve import Request, ServeEngine
+
+ARCHS = ["qwen3-1.7b", "xlstm-350m", "deepseek-moe-16b"]
+
+
+def main() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for arch in ARCHS:
+        cfg = reduced_config(arch).replace(dtype="float32")
+        engine = ServeEngine(cfg, batch_size=2, max_len=96)
+        reqs = [Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=32, dtype=np.int32),
+            max_new_tokens=16) for i in range(4)]
+        engine.serve(reqs)
+        st = engine.stats
+        rows.append({
+            "name": f"serve_{arch}",
+            "us_per_call": 1e6 * st.decode_s / max(st.tokens_out, 1),
+            "decode_tok_per_s": st.tokens_per_s,
+            "prefill_s": st.prefill_s,
+        })
+    emit(rows, "serving")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""§Perf hillclimbing experiments (deliverable g).
+
+Three pairs chosen from the baseline roofline table (EXPERIMENTS.md §Perf):
+  A. deepseek-v2-lite-16b × long_500k — worst useful-compute ratio
+     (naive MLA decode reconstructs K/V for the whole 512k context each
+     step).  Levers: MLA weight absorption; data-axis cache sharding.
+  B. xlstm-350m × train_4k — most collective-bound.  Levers: drop FSDP
+     (350M params replicate fine; per-layer all-gathers vanish),
+     sequence-parallel residual.
+  C. deepseek-moe-16b × train_4k — most representative of the paper's
+     concern (expert placement = the offloading/placement decision).
+     Levers: bf16 expert-combine psum; capacity factor.
+
+Each experiment: hypothesis → change (config knob) → re-lower → roofline
+delta → confirmed/refuted.  Run AFTER the dry-run sweeps:
+
+    PYTHONPATH=src python -m benchmarks.perf_experiments
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import json  # noqa: E402
+
+
+def run() -> list[dict]:
+    from repro.launch.dryrun import run_one
+
+    # NOTE on baselines: A0/B0/C0 reconstruct the PRE-adoption framework
+    # (the winning variants B1/B3/C2 are now defaults — see steps.assemble
+    # and configs/xlstm_350m.py), so the kw dicts below explicitly pin the
+    # baseline knobs.
+    experiments = [
+        # --- Pair A: MLA long-context decode --------------------------------
+        dict(name="A0_baseline_mla_naive", arch="deepseek-v2-lite-16b",
+             shape="long_500k", kw={"mla_absorbed": False},
+             hypothesis="baseline: naive MLA reconstructs K/V (S×r×H·(dn+dv)"
+                        " flops + S×H×(dn+dv) bytes per layer per step)"),
+        dict(name="A1_mla_absorbed", arch="deepseek-v2-lite-16b",
+             shape="long_500k", kw={"mla_absorbed": True},
+             hypothesis="absorption scores against the latent cache directly;"
+                        " predict compute ↓ >10x (no K/V re-expansion) and"
+                        " the all-gather of expanded K/V vanishes"),
+        dict(name="A2_absorbed_seqshard", arch="deepseek-v2-lite-16b",
+             shape="long_500k", kw={"mla_absorbed": True},
+             seq_shard_cache=True,
+             hypothesis="also shard the latent-cache sequence over data"
+                        " (flash-decode). REFUTED-AS-NO-OP: the cache policy"
+                        " already seq-shards when batch=1 (sharding.py)"),
+        # --- Pair B: xlstm collective-bound train ---------------------------
+        dict(name="B0_baseline_fsdp", arch="xlstm-350m", shape="train_4k",
+             kw={"xlstm_pin_inner": False, "loss_chunk": 512},
+             force_fsdp=True,
+             hypothesis="baseline: FSDP shards 350M params over data=16;"
+                        " every layer all-gathers weights each step"),
+        dict(name="B1_no_fsdp", arch="xlstm-350m", shape="train_4k",
+             kw={"xlstm_pin_inner": False, "loss_chunk": 512},
+             hypothesis="replicating params (0.9GB bf16 + 3.5GB adam)"
+                        " removes per-layer weight all-gathers -> collective"
+                        " ↓ several x. CONFIRMED-PARTIAL: 4.94->3.40s (-31%);"
+                        " 114GiB of activation all-gathers remain"),
+        dict(name="B3_pin_inner", arch="xlstm-350m", shape="train_4k",
+             kw={"xlstm_pin_inner": True, "loss_chunk": 512},
+             hypothesis="the remaining all-gather is GSPMD splitting the"
+                        " mLSTM up-projection over 'model' then gathering"
+                        " [B,S,di] for the 4-head reshape; pin it replicated"
+                        " -> collective ↓ big, compute ↑ (replicated matmul)"),
+        # --- Pair C: MoE expert-parallel train ------------------------------
+        dict(name="C0_baseline_sp", arch="deepseek-moe-16b",
+             shape="train_4k",
+             kw={"seq_parallel": True, "loss_chunk": 512},
+             hypothesis="baseline: Megatron-SP residual + shard_map expert"
+                        " parallelism (the dense-model default)"),
+        dict(name="C1_bf16_psum", arch="deepseek-moe-16b", shape="train_4k",
+             kw={"seq_parallel": True, "loss_chunk": 512,
+                 "moe_bf16_combine": True},
+             hypothesis="halve expert-combine psum bytes with bf16."
+                        " REFUTED-AS-ALREADY-TRUE: the psum input was"
+                        " already bf16; terms unchanged"),
+        dict(name="C2_no_sp", arch="deepseek-moe-16b", shape="train_4k",
+             kw={"seq_parallel": False, "loss_chunk": 512},
+             hypothesis="the 392GiB all-gathers are SP resharding the"
+                        " residual around the MoE shard_map each layer;"
+                        " disable SP for MoE -> collective ↓ ~15x at the"
+                        " cost of unsharded saved carries (+memory)"),
+        dict(name="C4_no_sp_bf16combine", arch="deepseek-moe-16b",
+             shape="train_4k",
+             kw={"seq_parallel": False, "loss_chunk": 512,
+                 "moe_bf16_combine": True},
+             hypothesis="recover memory: keep the [T,k,d] weighted combine"
+                        " in bf16 instead of f32 -> fits 16G again with the"
+                        " 15x collective win intact"),
+    ]
+
+    results = []
+    for ex in experiments:
+        print(f"\n[perf] === {ex['name']}: {ex['hypothesis']}")
+        extra = dict(ex.get("kw") or {})
+        if ex.get("force_fsdp"):
+            os.environ["REPRO_FORCE_FSDP"] = "1"
+        rec = run_one(ex["arch"], ex["shape"],
+                      seq_shard_cache=ex.get("seq_shard_cache", False),
+                      extra_cfg_kw=extra or None)
+        os.environ.pop("REPRO_FORCE_FSDP", None)
+        rec["experiment"] = ex["name"]
+        rec["hypothesis"] = ex["hypothesis"]
+        results.append(rec)
+        if rec["status"] == "ok":
+            ro = rec["roofline"]
+            print(f"[perf] terms: compute={ro['compute_s']:.3e} "
+                  f"memory={ro['memory_s']:.3e} "
+                  f"collective={ro['collective_s']:.3e} "
+                  f"dominant={ro['dominant']} "
+                  f"mem/dev={rec['bytes_per_device_tpu_adjusted']/2**30:.2f}GiB")
+        else:
+            print(f"[perf] FAILED: {rec.get('error')}")
+    out = "results/perf_experiments.json"
+    os.makedirs("results", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\n[perf] wrote {out}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

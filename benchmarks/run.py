@@ -1,0 +1,46 @@
+"""Benchmark orchestrator. One function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Scale the profiling-grid size
+with REPRO_PROFILE_RUNS (default 150 measured runs × 5 hardware specs).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_fl, bench_kernels, bench_offload,
+                            bench_roofline, bench_scheduler, bench_serving,
+                            fig2a_mlp, fig2b_gbt, fig3_predictions)
+    benches = [
+        ("fig2a_mlp (paper Fig. 2a)", fig2a_mlp.main),
+        ("fig2b_gbt (paper Fig. 2b)", fig2b_gbt.main),
+        ("fig3_predictions (paper Fig. 3)", fig3_predictions.main),
+        ("offload (paper §II-C)", bench_offload.main),
+        ("scheduler (paper §II-D)", bench_scheduler.main),
+        ("fl (paper §II-B)", bench_fl.main),
+        ("kernels", bench_kernels.main),
+        ("serving", bench_serving.main),
+        ("roofline (deliverable g)", bench_roofline.main),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else ""
+    failures = 0
+    for name, fn in benches:
+        if only and only not in name:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:                      # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+        print(f"# --- {name} done in {time.time()-t0:.0f}s", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Edge offloading simulation (paper §II-C + §II-D):
+
+Sweeps link conditions for a CNN workload across heterogeneous devices,
+compares all offloading policies (incl. the Q-learning controller), then
+schedules a 30-task queue over the edge cluster with predictor-driven ETC.
+
+Run:  PYTHONPATH=src python examples/offload_simulation.py
+"""
+import numpy as np
+
+from repro.core import offload as off
+from repro.core import scheduler as sch
+from repro.core.workloads import WorkloadConfig
+from repro.hw import EDGE_DEVICES, get_device
+
+
+def main() -> None:
+    wc = WorkloadConfig("cnn", 2, epochs=5, optimiser="adam", lr=1e-3,
+                        batch_size=32)
+    layers = off.workload_layer_costs(wc)
+    print(f"workload: {wc.label()} — {len(layers)} layers, "
+          f"{sum(l.flops for l in layers)/1e9:.2f} GFLOP/batch")
+
+    print("\n== offloading policies across link conditions "
+          "(latency ms | split point) ==")
+    links = {"2 Mb/s": 0.25e6, "20 Mb/s": 2.5e6, "200 Mb/s": 25e6,
+             "2 Gb/s": 250e6}
+    header = f"{'link':>10} | " + " | ".join(
+        f"{p:>14}" for p in ("local", "remote", "greedy", "optimal",
+                             "qlearning"))
+    print(header)
+    for name, bw in links.items():
+        env = off.OffloadEnv(device=get_device("pi5-arm"),
+                             edge=get_device("edge-server-a100"),
+                             link_bw=bw, input_bytes=4 * 32 * 784)
+        pol = off.QLearningPolicy(layers, env, episodes=3000,
+                                  link_buckets=tuple(links.values())).train()
+        cells = []
+        for d in (off.local_only(layers, env), off.remote_only(layers, env),
+                  off.greedy_split(layers, env),
+                  off.optimal_split(layers, env), pol.decide(bw)):
+            cells.append(f"{d.total_time_s*1e3:8.2f} @{d.split:<2}")
+        print(f"{name:>10} | " + " | ".join(f"{c:>14}" for c in cells))
+
+    print("\n== scheduling 30 offloaded tasks over the edge cluster ==")
+    rng = np.random.default_rng(1)
+    nodes = [sch.Node(spec) for spec in EDGE_DEVICES.values()]
+    tasks = [sch.Task(f"task{i}", flops=float(rng.lognormal(25, 1.0)),
+                      input_bytes=float(rng.lognormal(13, 0.8)))
+             for i in range(30)]
+    etc = sch.etc_matrix(tasks, nodes)
+    for name, fn in sch.SCHEDULERS.items():
+        s = fn(tasks, nodes, etc)
+        print(f"  {name:>12}: makespan {s.makespan:7.2f}s  "
+              f"mean-completion {s.mean_completion:7.2f}s")
+
+
+if __name__ == "__main__":
+    main()

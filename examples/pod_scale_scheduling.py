@@ -1,0 +1,104 @@
+"""The paper's roadmap realised at datacenter scale.
+
+The paper profiles laptop CNNs to schedule edge offloads.  Here the SAME
+pipeline runs over the TPU dry-run artifacts: the 39 compiled
+(architecture × input-shape) workloads are the profiling dataset, a GBT
+learns (arch features, shape, hardware) → step-time, and the scheduler
+places the whole workload mix across a heterogeneous 4-pod fleet.
+
+Requires results/dryrun_single_pod.json (run repro.launch.dryrun first).
+
+Run:  PYTHONPATH=src python examples/pod_scale_scheduling.py
+"""
+import json
+import os
+
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core import scheduler as sch
+from repro.core.predictors import GBTRegressor
+from repro.hw import DeviceSpec
+
+
+def arch_features(cfg, shape) -> list[float]:
+    return [
+        np.log10(max(cfg.num_layers, 1)),
+        np.log10(cfg.d_model),
+        cfg.num_heads, cfg.num_kv_heads,
+        np.log10(max(cfg.d_ff + cfg.moe_d_ff * max(cfg.top_k, 1), 1)),
+        np.log10(cfg.vocab_size),
+        float(bool(cfg.num_experts)), float(cfg.attn_kind == "mla"),
+        float(cfg.family in ("ssm", "hybrid")),
+        np.log10(shape.seq_len), np.log10(shape.global_batch),
+        {"train": 0.0, "prefill": 1.0, "decode": 2.0}[shape.mode],
+    ]
+
+
+def main() -> None:
+    path = "results/dryrun_single_pod.json"
+    if not os.path.exists(path):
+        print(f"run the dry-run first: {path} missing")
+        return
+    recs = [r for r in json.load(open(path)) if r["status"] == "ok"]
+    x, y, names = [], [], []
+    for r in recs:
+        cfg = get_config(r["arch"])
+        shape = INPUT_SHAPES[r["shape"]]
+        ro = r["roofline"]
+        bound = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        x.append(arch_features(cfg, shape))
+        y.append(np.log10(max(bound, 1e-9)))
+        names.append(f"{r['arch']}×{r['shape']}")
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y)
+
+    # leave-one-out validation of the pod-scale profiling model
+    errs = []
+    for i in range(len(x)):
+        m = GBTRegressor(n_trees=150, max_depth=4, learning_rate=0.1,
+                         min_samples_leaf=1)
+        mask = np.arange(len(x)) != i
+        m.fit(x[mask], y[mask])
+        errs.append(abs(float(m.predict(x[i:i + 1])[0]) - y[i]))
+    print(f"== pod-scale profiling model: LOO median |log10 err| "
+          f"{np.median(errs):.3f} (≈{10**np.median(errs):.2f}× time factor) "
+          f"over {len(x)} workloads")
+
+    # schedule the full mix over a heterogeneous fleet
+    model = GBTRegressor(n_trees=200, max_depth=4, min_samples_leaf=1
+                         ).fit(x, y)
+    fleet = [
+        DeviceSpec("v5e-pod", "tpu", "tpu-v5e", 197e12 * 256, 98e12 * 256,
+                   16e9 * 256, 819e9 * 256, 50e9, 1.7),
+        DeviceSpec("v5e-half", "tpu", "tpu-v5e", 197e12 * 128, 98e12 * 128,
+                   16e9 * 128, 819e9 * 128, 50e9, 1.7),
+        DeviceSpec("v4-pod", "tpu", "tpu-v4", 275e12 * 128, 137e12 * 128,
+                   32e9 * 128, 1200e9 * 128, 45e9, 1.05),
+        DeviceSpec("edge-octo", "gpu", "cuda", 312e12 * 8, 19.5e12 * 8,
+                   40e9 * 8, 1555e9 * 8, 25e9, 1.41),
+    ]
+    nodes = [sch.Node(spec) for spec in fleet]
+    base = fleet[0]
+    tasks = []
+    for i, nm in enumerate(names):
+        t_base = 10 ** float(model.predict(x[i:i + 1])[0])
+        tasks.append(sch.Task(nm, flops=t_base * base.peak_flops_f32 * 0.35))
+
+    etc = sch.etc_matrix(tasks, nodes)
+    for name, fn in (("round_robin", sch.round_robin),
+                     ("min_min", sch.min_min), ("heft", sch.heft)):
+        s = fn(tasks, nodes, etc)
+        print(f"  {name:>12}: makespan {s.makespan:8.3f}s, "
+              f"mean completion {s.mean_completion:7.3f}s")
+    s = sch.heft(tasks, nodes, etc)
+    by_node = {}
+    for a in s.assignments:
+        by_node.setdefault(a.node, []).append(a.task.name)
+    for node, lst in by_node.items():
+        print(f"  {node}: {len(lst)} workloads "
+              f"(e.g. {', '.join(lst[:3])}...)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: the paper's pipeline in 60 seconds.
+
+  1. profile a handful of Table-I AI workloads on this machine,
+  2. train the GBT profiling model (the paper's winner),
+  3. predict resources/time for an unseen workload,
+  4. use the prediction to make an offloading decision.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import offload as off
+from repro.core.dataset import generate
+from repro.core.features import featurize, targets_of
+from repro.core.predictors import MultiTargetGBT, per_target_nrmse
+from repro.core.profiler import profile_workload
+from repro.core.workloads import WorkloadConfig
+from repro.hw import get_device
+
+
+def main() -> None:
+    # 1. profile a small grid (measured on this host)
+    print("== profiling 12 Table-I workloads (measured) ...")
+    records, data = generate(n_runs=12, max_steps=4, verbose=False)
+    print(f"   {len(records)} records "
+          f"({len([r for r in records if '@' not in r.label])} measured, "
+          f"rest hardware-projected)")
+
+    # 2. train the profiling model
+    norm, (xs, ys) = data.normalised()
+    tr, te = norm.split(0.8)
+    model = MultiTargetGBT(n_trees=120, max_depth=8, subsample=0.8)
+    model.fit(tr.x, tr.y)
+    nrmse = per_target_nrmse(model.predict(te.x), te.y)
+    print(f"== GBT profiling model: nRMSE per target "
+          f"{dict(zip(te.target_names, nrmse.round(4)))}")
+
+    # 3. predict an UNSEEN workload's profile
+    wc = WorkloadConfig("cnn", 1, epochs=10, optimiser="rmsprop", lr=5e-3,
+                        batch_size=64)
+    rec = profile_workload(wc, max_steps=2)          # ground truth
+    x = (featurize(rec) - xs[0]) / xs[1]
+    pred = model.predict(x[None])[0] * ys[1] + ys[0]
+    true = targets_of(rec)
+    print(f"== unseen workload {wc.label()}:")
+    for name, p, t in zip(te.target_names, pred, true):
+        print(f"   {name:>12}: predicted {p:.3g}, measured {t:.3g}")
+
+    # 4. offloading decision from the predicted profile
+    layers = off.workload_layer_costs(wc)
+    env = off.OffloadEnv(device=get_device("pi5-arm"),
+                         edge=get_device("edge-server-a100"),
+                         link_bw=0.125e9, input_bytes=4 * 64 * 784)
+    d = off.optimal_split(layers, env)
+    print(f"== offload decision: run layers [0,{d.split}) on-device, "
+          f"rest at the edge -> {d.total_time_s*1e3:.2f} ms "
+          f"(local-only {off.local_only(layers, env).total_time_s*1e3:.2f} "
+          f"ms, remote-only "
+          f"{off.remote_only(layers, env).total_time_s*1e3:.2f} ms)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.ckpt import checkpoint
+from repro.ckpt.checkpoint import latest, restore, save
+
+__all__ = ["checkpoint", "latest", "restore", "save"]

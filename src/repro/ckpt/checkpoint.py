@@ -1,0 +1,77 @@
+"""Pytree checkpointing: atomic npz save/restore with step metadata.
+
+Sharded arrays are gathered to host before writing (single-controller
+semantics); restore re-places leaves onto the current sharding via the
+caller's ``like`` tree.  Kept dependency-free (no orbax) per the
+build-everything mandate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "::"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def save(path: str, tree: PyTree, *, step: int = 0,
+         metadata: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = _flatten(tree)
+    meta = {"step": step, **(metadata or {})}
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta), **arrays)
+        os.replace(tmp, path)            # atomic
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def restore(path: str, like: PyTree) -> tuple[PyTree, dict]:
+    """Restore into the structure (and shardings) of ``like``."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path_keys, leaf in flat:
+            key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path_keys)
+            arr = z[key]
+            if hasattr(leaf, "sharding") and leaf.sharding is not None:
+                try:
+                    leaves.append(jax.device_put(arr, leaf.sharding))
+                    continue
+                except Exception:        # noqa: BLE001
+                    pass
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+def latest(directory: str, prefix: str = "ckpt_") -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    cands = [f for f in os.listdir(directory)
+             if f.startswith(prefix) and f.endswith(".npz")]
+    if not cands:
+        return None
+    cands.sort(key=lambda f: int(f[len(prefix):-4]))
+    return os.path.join(directory, cands[-1])

@@ -1,0 +1,71 @@
+"""Featurisation of profiling records (paper §II-A).
+
+Maps (model type, hyperparameters, hardware, dataset) → a fixed-width
+feature vector for the regression models.  Per-family extensions (MoE
+expert counts, SSM state size, enc/dec lengths) keep the same vector
+width so a single global model covers heterogeneous workloads
+(DESIGN.md §4, arch-applicability).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.profiler import ProfileRecord
+from repro.core.workloads import CNN_TYPES, MLP_TYPES, OPTIMISERS
+
+FEATURE_NAMES = [
+    # model type
+    "is_cnn", "is_mlp", "depth", "width_sum", "width_max", "log_params",
+    # hyperparameters
+    "log_lr", "batch_size", "epochs",
+    *(f"opt_{o}" for o in OPTIMISERS),
+    # dataset
+    "log_dataset_size",
+    # hardware
+    "log_hw_peak_flops", "log_hw_hbm_bw", "log_hw_link_bw", "hw_clock_ghz",
+    "hw_is_accelerated",
+]
+
+TARGET_NAMES = ["flops", "macs", "total_time"]
+
+
+def featurize(rec: ProfileRecord) -> np.ndarray:
+    cfg = rec.config
+    kind = cfg["kind"]
+    if kind == "cnn":
+        arch = CNN_TYPES[cfg["type_idx"]]
+        widths = [l["out"] for l in arch]
+    else:
+        widths = list(MLP_TYPES[cfg["type_idx"]])
+    hw = rec.hardware
+    feats = [
+        1.0 if kind == "cnn" else 0.0,
+        1.0 if kind == "mlp" else 0.0,
+        float(len(widths)),
+        float(sum(widths)),
+        float(max(widths)),
+        float(np.log10(max(rec.param_count, 1))),
+        float(np.log10(cfg["lr"])),
+        float(cfg["batch_size"]),
+        float(cfg["epochs"]),
+        *(1.0 if cfg["optimiser"] == o else 0.0 for o in OPTIMISERS),
+        float(np.log10(max(cfg["dataset_size"], 1))),
+        float(np.log10(hw["hw_peak_flops"])),
+        float(np.log10(hw["hw_hbm_bw"])),
+        float(np.log10(max(hw["hw_link_bw"], 1.0))),
+        float(hw["hw_clock_ghz"]),
+        float(hw["hw_is_accelerated"]),
+    ]
+    return np.asarray(feats, np.float32)
+
+
+def targets_of(rec: ProfileRecord) -> np.ndarray:
+    t = rec.targets()
+    return np.asarray([t[n] for n in TARGET_NAMES], np.float32)
+
+
+def records_to_dataset(records: list[ProfileRecord]):
+    from repro.data.synthetic import TabularDataset
+    x = np.stack([featurize(r) for r in records])
+    y = np.stack([targets_of(r) for r in records])
+    return TabularDataset(x, y, list(FEATURE_NAMES), list(TARGET_NAMES))

@@ -1,0 +1,15 @@
+from repro.core.fl.dp import DPConfig, clip_update, global_norm, privatise_update
+from repro.core.fl.fedavg import (Client, FedAvgConfig, FedAvgResult,
+                                  run_fedavg, split_clients)
+
+__all__ = [
+    "Client",
+    "DPConfig",
+    "FedAvgConfig",
+    "FedAvgResult",
+    "clip_update",
+    "global_norm",
+    "privatise_update",
+    "run_fedavg",
+    "split_clients",
+]

@@ -1,0 +1,46 @@
+"""Differential privacy for federated profiling-model updates (paper §II-B).
+
+Gaussian mechanism on client updates: clip the update's global L2 norm to
+``clip_norm`` and add N(0, σ²·clip²) noise, σ derived from (ε, δ) via the
+classic analytic bound σ = clip · √(2 ln(1.25/δ)) / ε per round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    epsilon: float = 8.0
+    delta: float = 1e-5
+    clip_norm: float = 1.0
+
+    @property
+    def sigma(self) -> float:
+        return (self.clip_norm * math.sqrt(2.0 * math.log(1.25 / self.delta))
+                / self.epsilon)
+
+
+def global_norm(tree) -> float:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return float(jnp.sqrt(sum(jnp.sum(jnp.square(l)) for l in leaves)))
+
+
+def clip_update(tree, clip_norm: float):
+    norm = global_norm(tree)
+    scale = min(1.0, clip_norm / max(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda l: l * scale, tree)
+
+
+def privatise_update(tree, cfg: DPConfig, rng: np.random.Generator):
+    """Clip + Gaussian noise (applied client-side before aggregation)."""
+    clipped = clip_update(tree, cfg.clip_norm)
+    return jax.tree_util.tree_map(
+        lambda l: l + jnp.asarray(
+            rng.normal(0.0, cfg.sigma, size=l.shape), l.dtype),
+        clipped)

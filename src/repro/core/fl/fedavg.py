@@ -1,0 +1,171 @@
+"""Federated learning of the *global profiling model* (paper §II-B).
+
+Profiling data is collected on users' devices and is sensitive, so the
+global profiling model is trained with FedAvg + differential privacy
+(the paper builds on the authors' kubeflower framework; here the
+communication pattern — server broadcast → client local steps → weighted
+aggregation — is mapped to JAX-native constructs per DESIGN.md §2).
+
+Validation modes (paper §II-B): *federated* (each client holds out a local
+test split) and *centralised* (the server evaluates the global model on an
+unseen dataset).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fl.dp import DPConfig, privatise_update
+from repro.core.predictors.mlp import MLPRegressor
+from repro.data.synthetic import batches
+from repro.optim import apply_updates, get_optimizer
+
+
+@dataclasses.dataclass
+class Client:
+    """One edge device holding a private shard of profiling records."""
+    name: str
+    x: np.ndarray
+    y: np.ndarray
+    test_frac: float = 0.2
+
+    def splits(self, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        idx = rng.permutation(len(self.x))
+        k = int(len(idx) * (1 - self.test_frac))
+        return (self.x[idx[:k]], self.y[idx[:k]],
+                self.x[idx[k:]], self.y[idx[k:]])
+
+
+def split_clients(x: np.ndarray, y: np.ndarray, n_clients: int,
+                  by: Optional[np.ndarray] = None, seed: int = 0
+                  ) -> list[Client]:
+    """Partition the profiling dataset into per-device shards.
+
+    ``by`` (e.g. a hardware-type column) produces non-IID shards — the
+    heterogeneity case the paper targets; None → IID random shards.
+    """
+    rng = np.random.default_rng(seed)
+    if by is not None:
+        keys = np.unique(by)
+        groups = [np.where(by == k)[0] for k in keys]
+        # merge/split groups into n_clients roughly equal shards
+        order = rng.permutation(len(x)) if len(groups) < n_clients else None
+        if order is not None:
+            groups = np.array_split(order, n_clients)
+    else:
+        groups = np.array_split(rng.permutation(len(x)), n_clients)
+    return [Client(f"client{i}", x[g], y[g]) for i, g in enumerate(groups)]
+
+
+@dataclasses.dataclass
+class FedAvgConfig:
+    rounds: int = 20
+    local_epochs: int = 2
+    lr: float = 1e-3
+    optimiser: str = "adam"
+    batch_size: int = 32
+    hidden: tuple = (128, 64)
+    dp: Optional[DPConfig] = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class FedAvgResult:
+    model: MLPRegressor
+    round_history: list[dict]
+    federated_rmse: float
+    centralised_rmse: Optional[float]
+
+
+def _tree_mean(trees: list, weights: np.ndarray):
+    total = float(weights.sum())
+    def avg(*leaves):
+        return sum(w * l for w, l in zip(weights, leaves)) / total
+    return jax.tree_util.tree_map(avg, *trees)
+
+
+def _local_train(model: MLPRegressor, params, x, y, cfg: FedAvgConfig,
+                 seed: int):
+    """Local client steps; returns the parameter UPDATE (delta)."""
+    opt = get_optimizer(cfg.optimiser, cfg.lr)
+    state = opt.init(params)
+    n_layers = model.n_layers_
+
+    @jax.jit
+    def step(p, s, bx, by):
+        def loss_fn(q):
+            pred = MLPRegressor._forward(q, bx, n_layers)
+            return jnp.mean((pred - by) ** 2)
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        updates, s2 = opt.update(grads, s, p)
+        return apply_updates(p, updates), s2, loss
+
+    p = params
+    for ep in range(cfg.local_epochs):
+        for bx, by in batches(x, y, min(cfg.batch_size, len(x)),
+                              seed=seed + ep):
+            p, state, _ = step(p, state, jnp.asarray(bx), jnp.asarray(by))
+    return jax.tree_util.tree_map(lambda a, b: a - b, p, params)
+
+
+def run_fedavg(clients: list[Client], cfg: FedAvgConfig,
+               central_test: Optional[tuple] = None) -> FedAvgResult:
+    """Server loop: broadcast → local training → (DP) aggregate."""
+    # bootstrap a model skeleton on the pooled feature stats
+    x_all = np.concatenate([c.x for c in clients])
+    y_all = np.concatenate([c.y for c in clients])
+    model = MLPRegressor(hidden=cfg.hidden, lr=cfg.lr,
+                         optimiser=cfg.optimiser, epochs=0,
+                         seed=cfg.seed)
+    model.fit(x_all, y_all)                  # init params + scalers only
+    # (pooled feature scaling is metadata, not raw data — acceptable under
+    # the paper's threat model; per-client scaling is a one-line swap)
+    params = {k: jnp.asarray(v) for k, v in model.params_.items()}
+
+    def norm_x(x):
+        return (x - model.x_mu_) / model.x_sd_
+
+    def norm_y(y):
+        return (y - model.y_mu_) / model.y_sd_
+
+    splits = [c.splits(cfg.seed) for c in clients]
+    weights = np.array([len(s[0]) for s in splits], np.float64)
+    rng = np.random.default_rng(cfg.seed)
+    history = []
+    for rnd in range(cfg.rounds):
+        deltas = []
+        for ci, (xtr, ytr, _, _) in enumerate(splits):
+            delta = _local_train(model, params, norm_x(xtr), norm_y(ytr),
+                                 cfg, seed=cfg.seed + 997 * rnd + ci)
+            if cfg.dp:
+                delta = privatise_update(delta, cfg.dp, rng)
+            deltas.append(delta)
+        mean_delta = _tree_mean(deltas, weights)
+        params = jax.tree_util.tree_map(lambda p, d: p + d, params,
+                                        mean_delta)
+        # federated validation
+        errs = []
+        for xtr, ytr, xte, yte in splits:
+            if len(xte) == 0:
+                continue
+            pred = MLPRegressor._forward(params, jnp.asarray(norm_x(xte)),
+                                         model.n_layers_)
+            errs.append(float(jnp.mean((pred - norm_y(yte)) ** 2)))
+        fed_rmse = float(np.sqrt(np.mean(errs)))
+        history.append({"round": rnd, "federated_rmse": fed_rmse})
+
+    model.params_ = jax.device_get(params)
+    cen = None
+    if central_test is not None:
+        xte, yte = central_test
+        pred = model.predict(xte)
+        cen = float(np.sqrt(np.mean(
+            ((pred - yte) / (np.abs(model.y_sd_) + 1e-12)) ** 2)))
+    return FedAvgResult(model=model, round_history=history,
+                        federated_rmse=history[-1]["federated_rmse"],
+                        centralised_rmse=cen)

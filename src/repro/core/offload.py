@@ -1,0 +1,210 @@
+"""Computation offloading policies (paper §II-C).
+
+Split computing: the first ``s`` layers of a network run on the device, the
+activation at the split crosses the link, the remaining layers run on the
+edge server.  Costs come from a :class:`CostModel` — either analytic
+(FLOPs/roofline) or *predicted by the trained profiling model* (the paper's
+point: profiling → prediction → offloading decisions).
+
+Policies:
+  * ``local_only`` / ``remote_only`` — degenerate baselines
+  * ``greedy``   — walk split points until the marginal move stops helping
+  * ``optimal``  — exact: evaluate all L+1 split points (O(L), the DP
+                   closed form for a chain graph)
+  * ``QLearningPolicy`` — tabular DRL over stochastic link states (the
+                   paper names DRL as the usual controller)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.hw import DeviceSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCost:
+    """Static per-layer profile (per batch)."""
+    name: str
+    flops: float                 # compute cost of the layer
+    act_bytes: float             # activation size flowing OUT of the layer
+    param_bytes: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadEnv:
+    device: DeviceSpec
+    edge: DeviceSpec
+    link_bw: float               # bytes/s currently available
+    link_latency_s: float = 0.005
+    input_bytes: float = 0.0     # bytes to ship if split at 0 (raw input)
+
+
+def layer_time(flops: float, dev: DeviceSpec, efficiency: float = 0.35
+               ) -> float:
+    """Simple effective-throughput model (efficiency ≈ measured MFU)."""
+    return flops / (dev.peak_flops_f32 * efficiency)
+
+
+@dataclasses.dataclass
+class SplitDecision:
+    split: int                   # layers [0, split) on device, rest on edge
+    total_time_s: float
+    device_time_s: float
+    transfer_time_s: float
+    edge_time_s: float
+
+
+def split_time(layers: Sequence[LayerCost], split: int, env: OffloadEnv,
+               time_fn: Optional[Callable[[LayerCost, DeviceSpec], float]]
+               = None) -> SplitDecision:
+    """Latency of executing with the given split point (0..L)."""
+    time_fn = time_fn or (lambda lc, dev: layer_time(lc.flops, dev))
+    dev_t = sum(time_fn(lc, env.device) for lc in layers[:split])
+    edge_t = sum(time_fn(lc, env.edge) for lc in layers[split:])
+    if split == len(layers):
+        xfer = 0.0
+    else:
+        xfer_bytes = (layers[split - 1].act_bytes if split > 0
+                      else env.input_bytes)
+        xfer = env.link_latency_s + xfer_bytes / max(env.link_bw, 1.0)
+    return SplitDecision(split, dev_t + xfer + edge_t, dev_t, xfer, edge_t)
+
+
+def local_only(layers, env, **kw) -> SplitDecision:
+    return split_time(layers, len(layers), env, **kw)
+
+
+def remote_only(layers, env, **kw) -> SplitDecision:
+    return split_time(layers, 0, env, **kw)
+
+
+def optimal_split(layers, env, **kw) -> SplitDecision:
+    return min((split_time(layers, s, env, **kw)
+                for s in range(len(layers) + 1)),
+               key=lambda d: d.total_time_s)
+
+
+def greedy_split(layers, env, **kw) -> SplitDecision:
+    """Start local-only; move the split point while it helps."""
+    best = local_only(layers, env, **kw)
+    for s in range(len(layers) - 1, -1, -1):
+        cand = split_time(layers, s, env, **kw)
+        if cand.total_time_s <= best.total_time_s:
+            best = cand
+        else:
+            break
+    return best
+
+
+# --------------------------------------------------------------------------
+# Tabular Q-learning over stochastic link states (the DRL controller)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class QLearningPolicy:
+    """State = discretised link bandwidth bucket; action = split point."""
+    layers: Sequence[LayerCost]
+    env_base: OffloadEnv
+    link_buckets: tuple = (0.125e9 / 16, 0.125e9 / 4, 0.125e9, 1.25e9)
+    episodes: int = 3000
+    alpha: float = 0.2
+    gamma: float = 0.0           # contextual bandit: immediate latency
+    eps: float = 0.2
+    seed: int = 0
+
+    def __post_init__(self):
+        self.n_actions = len(self.layers) + 1
+        self.q_ = np.zeros((len(self.link_buckets), self.n_actions))
+
+    def _env_for(self, bucket: int) -> OffloadEnv:
+        return dataclasses.replace(self.env_base,
+                                   link_bw=self.link_buckets[bucket])
+
+    def train(self) -> "QLearningPolicy":
+        rng = np.random.default_rng(self.seed)
+        for ep in range(self.episodes):
+            s = rng.integers(len(self.link_buckets))
+            if rng.random() < self.eps:
+                a = rng.integers(self.n_actions)
+            else:
+                a = int(np.argmax(self.q_[s]))
+            latency = split_time(self.layers, int(a),
+                                 self._env_for(int(s))).total_time_s
+            reward = -latency
+            self.q_[s, a] += self.alpha * (reward - self.q_[s, a])
+        return self
+
+    def decide(self, link_bw: float) -> SplitDecision:
+        bucket = int(np.argmin([abs(link_bw - b) for b in self.link_buckets]))
+        a = int(np.argmax(self.q_[bucket]))
+        env = dataclasses.replace(self.env_base, link_bw=link_bw)
+        return split_time(self.layers, a, env)
+
+    def regret(self) -> float:
+        """Mean latency gap to the optimal split across link states."""
+        gaps = []
+        for b in range(len(self.link_buckets)):
+            env = self._env_for(b)
+            learned = split_time(self.layers, int(np.argmax(self.q_[b])), env)
+            best = optimal_split(self.layers, env)
+            gaps.append(learned.total_time_s - best.total_time_s)
+        return float(np.mean(gaps))
+
+
+# --------------------------------------------------------------------------
+# Per-layer costs for the Table-I workloads + assigned transformer archs
+# --------------------------------------------------------------------------
+def workload_layer_costs(wc, batch_size: Optional[int] = None
+                         ) -> list[LayerCost]:
+    """Analytic per-layer costs of a Table-I CNN/MLP (inference)."""
+    from repro.core.workloads import IMG, NCLASS
+    bs = batch_size or wc.batch_size
+    costs = []
+    if wc.kind == "mlp":
+        dims = [IMG * IMG] + list(wc.arch) + [NCLASS]
+        for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+            costs.append(LayerCost(
+                f"fc{i}", flops=2.0 * bs * a * b,
+                act_bytes=4.0 * bs * b, param_bytes=4.0 * a * b))
+        return costs
+    hw, c_in = IMG, 1
+    for i, layer in enumerate(wc.arch):
+        k, c_out = layer["kernel"], layer["out"]
+        flops = 2.0 * bs * hw * hw * k * k * c_in * c_out
+        if layer["pool"]:
+            hw //= 2
+        costs.append(LayerCost(
+            f"conv{i}", flops=flops, act_bytes=4.0 * bs * hw * hw * c_out,
+            param_bytes=4.0 * k * k * c_in * c_out))
+        c_in = c_out
+    costs.append(LayerCost(
+        "head", flops=2.0 * bs * hw * hw * c_in * NCLASS,
+        act_bytes=4.0 * bs * NCLASS,
+        param_bytes=4.0 * hw * hw * c_in * NCLASS))
+    return costs
+
+
+def transformer_layer_costs(cfg, seq_len: int, batch_size: int
+                            ) -> list[LayerCost]:
+    """Analytic per-layer inference costs of an assigned architecture —
+    the pod-scale analogue used by the placement simulator."""
+    d, l = cfg.d_model, max(cfg.num_layers, 1)
+    t = seq_len * batch_size
+    attn_proj = 2.0 * t * d * (cfg.num_heads * cfg.head_dim) * 2
+    attn_kv = 2.0 * t * d * (cfg.num_kv_heads * cfg.head_dim) * 2
+    attn_scores = 2.0 * batch_size * cfg.num_heads * seq_len * seq_len \
+        * cfg.head_dim * 2
+    if cfg.num_experts:
+        ff = 3 * 2.0 * t * d * cfg.moe_d_ff * (cfg.top_k
+                                               + cfg.num_shared_experts)
+    elif cfg.d_ff:
+        n_mat = 2 if cfg.mlp_act in ("gelu_plain", "relu2") else 3
+        ff = n_mat * 2.0 * t * d * cfg.d_ff
+    else:
+        ff = 2.0 * t * d * d * 4     # xlstm-style block projections
+    per_layer = attn_proj + attn_kv + attn_scores + ff
+    act = 2.0 * t * d
+    return [LayerCost(f"layer{i}", flops=per_layer, act_bytes=act)
+            for i in range(l)]

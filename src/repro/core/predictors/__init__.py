@@ -1,0 +1,17 @@
+from repro.core.predictors.common import (normalised_rmse, per_target_nrmse,
+                                          r2, rmse)
+from repro.core.predictors.gbt import GBTRegressor, MultiTargetGBT
+from repro.core.predictors.linear import RidgeRegressor
+from repro.core.predictors.mlp import SIZE_PRESETS, MLPRegressor
+
+__all__ = [
+    "GBTRegressor",
+    "MultiTargetGBT",
+    "MLPRegressor",
+    "RidgeRegressor",
+    "SIZE_PRESETS",
+    "normalised_rmse",
+    "per_target_nrmse",
+    "r2",
+    "rmse",
+]

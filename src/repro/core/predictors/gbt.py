@@ -1,0 +1,198 @@
+"""Gradient-boosted regression trees — the paper's winning profiler model
+("XGBoost, max_depth=12, subsample=0.8", Fig. 2b / Fig. 3).
+
+From-scratch histogram implementation (no xgboost dependency):
+
+  * features quantile-binned to uint8 codes (default 64 bins);
+  * squared loss → gradient = residual, hessian = count;
+  * per-node *gradient histograms* per feature (the compute hot-spot — the
+    Pallas TPU kernel in ``repro.kernels.gbt_hist`` is its accelerated twin,
+    and ``use_kernel=True`` routes through it);
+  * best split by the standard gain  GL²/nL + GR²/nR − G²/n;
+  * row subsampling per boosting round (the paper's ``subsample``);
+  * one ensemble per target (paper: "an individual boosted tree ensemble is
+    used for each target").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Node:
+    feature: int = -1
+    threshold_bin: int = 0
+    left: int = -1
+    right: int = -1
+    value: float = 0.0
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.feature < 0
+
+
+def quantile_bins(x: np.ndarray, n_bins: int) -> np.ndarray:
+    """Per-feature bin edges [F, n_bins-1] from quantiles."""
+    qs = np.linspace(0, 1, n_bins + 1)[1:-1]
+    return np.quantile(x, qs, axis=0).T.astype(np.float32)   # [F, n_bins-1]
+
+
+def bin_data(x: np.ndarray, edges: np.ndarray) -> np.ndarray:
+    """x [N,F] → uint8 bin codes via per-feature edges."""
+    codes = np.empty(x.shape, np.uint8)
+    for f in range(x.shape[1]):
+        codes[:, f] = np.searchsorted(edges[f], x[:, f]).astype(np.uint8)
+    return codes
+
+
+def grad_histogram(codes: np.ndarray, grad: np.ndarray, n_bins: int,
+                   use_kernel: bool = False) -> tuple[np.ndarray, np.ndarray]:
+    """Per-(feature, bin) gradient sums + counts. The GBT hot-spot.
+
+    codes [N, F] uint8; grad [N]. Returns (gsum [F, n_bins], cnt [F, n_bins]).
+    """
+    if use_kernel:
+        from repro.kernels.gbt_hist import ops
+        return ops.grad_histogram(codes, grad, n_bins)
+    n, f = codes.shape
+    flat = codes.astype(np.int64) + np.arange(f)[None, :] * n_bins
+    gsum = np.bincount(flat.ravel(), weights=np.repeat(grad, f),
+                       minlength=f * n_bins)
+    # repeat(grad, f) interleaves per-row; codes.ravel() is row-major [N,F]
+    cnt = np.bincount(flat.ravel(), minlength=f * n_bins)
+    return gsum.reshape(f, n_bins), cnt.reshape(f, n_bins).astype(np.float64)
+
+
+@dataclasses.dataclass
+class GBTRegressor:
+    """Single-target gradient-boosted trees."""
+    n_trees: int = 200
+    max_depth: int = 6
+    learning_rate: float = 0.1
+    subsample: float = 1.0
+    n_bins: int = 64
+    min_samples_leaf: int = 2
+    lambda_reg: float = 1.0
+    seed: int = 0
+    use_kernel: bool = False
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "GBTRegressor":
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y, np.float64).ravel()
+        rng = np.random.default_rng(self.seed)
+        self.edges_ = quantile_bins(x, self.n_bins)
+        codes = bin_data(x, self.edges_)
+        self.base_ = float(y.mean())
+        pred = np.full_like(y, self.base_)
+        self.trees_: list[list[_Node]] = []
+        n = len(y)
+        for _ in range(self.n_trees):
+            resid = y - pred
+            if self.subsample < 1.0:
+                rows = rng.random(n) < self.subsample
+                if rows.sum() < 2 * self.min_samples_leaf:
+                    rows = np.ones(n, bool)
+            else:
+                rows = np.ones(n, bool)
+            tree = self._build_tree(codes[rows], resid[rows])
+            self.trees_.append(tree)
+            pred += self.learning_rate * self._tree_predict(tree, codes)
+        return self
+
+    # -- tree growing -----------------------------------------------------
+    def _build_tree(self, codes: np.ndarray, grad: np.ndarray) -> list[_Node]:
+        nodes: list[_Node] = []
+
+        def grow(idx: np.ndarray, depth: int) -> int:
+            node_id = len(nodes)
+            nodes.append(_Node())
+            g = grad[idx]
+            n = len(idx)
+            value = g.sum() / (n + self.lambda_reg)
+            if depth >= self.max_depth or n < 2 * self.min_samples_leaf:
+                nodes[node_id].value = value
+                return node_id
+            gsum, cnt = grad_histogram(codes[idx], g, self.n_bins,
+                                       self.use_kernel)
+            gl = np.cumsum(gsum, axis=1)                   # [F, B]
+            nl = np.cumsum(cnt, axis=1)
+            gt, nt = g.sum(), float(n)
+            gr, nr = gt - gl, nt - nl
+            lam = self.lambda_reg
+            gain = (gl ** 2 / (nl + lam) + gr ** 2 / (nr + lam)
+                    - gt ** 2 / (nt + lam))
+            ok = (nl >= self.min_samples_leaf) & (nr >= self.min_samples_leaf)
+            gain = np.where(ok, gain, -np.inf)
+            f, b = np.unravel_index(np.argmax(gain), gain.shape)
+            if not np.isfinite(gain[f, b]) or gain[f, b] <= 1e-12:
+                nodes[node_id].value = value
+                return node_id
+            mask = codes[idx, f] <= b
+            left = grow(idx[mask], depth + 1)
+            right = grow(idx[~mask], depth + 1)
+            nodes[node_id].feature = int(f)
+            nodes[node_id].threshold_bin = int(b)
+            nodes[node_id].left = left
+            nodes[node_id].right = right
+            return node_id
+
+        grow(np.arange(len(grad)), 0)
+        return nodes
+
+    def _tree_predict(self, tree: list[_Node], codes: np.ndarray) -> np.ndarray:
+        out = np.empty(len(codes))
+        # vectorised level-order traversal
+        node_idx = np.zeros(len(codes), np.int32)
+        active = np.ones(len(codes), bool)
+        while active.any():
+            for nid in np.unique(node_idx[active]):
+                node = tree[nid]
+                sel = active & (node_idx == nid)
+                if node.is_leaf:
+                    out[sel] = node.value
+                    active &= ~sel
+                else:
+                    goes_left = codes[sel, node.feature] <= node.threshold_bin
+                    tgt = np.where(goes_left, node.left, node.right)
+                    node_idx[sel] = tgt
+        return out
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        codes = bin_data(np.asarray(x, np.float32), self.edges_)
+        pred = np.full(len(codes), self.base_)
+        for tree in self.trees_:
+            pred += self.learning_rate * self._tree_predict(tree, codes)
+        return pred
+
+
+@dataclasses.dataclass
+class MultiTargetGBT:
+    """One ensemble per target (paper Fig. 2b)."""
+    n_trees: int = 200
+    max_depth: int = 12
+    learning_rate: float = 0.1
+    subsample: float = 0.8
+    n_bins: int = 64
+    seed: int = 0
+    use_kernel: bool = False
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "MultiTargetGBT":
+        y = np.atleast_2d(y)
+        if y.shape[0] == len(x) and y.ndim == 2:
+            targets = y.T
+        else:
+            targets = y
+        self.models_ = []
+        for ti, yt in enumerate(targets):
+            m = GBTRegressor(
+                n_trees=self.n_trees, max_depth=self.max_depth,
+                learning_rate=self.learning_rate, subsample=self.subsample,
+                n_bins=self.n_bins, seed=self.seed + ti,
+                use_kernel=self.use_kernel).fit(x, yt)
+            self.models_.append(m)
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return np.stack([m.predict(x) for m in self.models_], axis=1)

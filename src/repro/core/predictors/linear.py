@@ -1,0 +1,29 @@
+"""Ridge regression baseline (sanity floor for the predictor comparison)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RidgeRegressor:
+    alpha: float = 1.0
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "RidgeRegressor":
+        x = np.asarray(x, np.float64)
+        y = np.atleast_2d(np.asarray(y, np.float64))
+        if y.shape[0] != len(x):
+            y = y.T
+        self.x_mu_ = x.mean(0)
+        self.x_sd_ = x.std(0) + 1e-8
+        xs = (x - self.x_mu_) / self.x_sd_
+        xs = np.concatenate([xs, np.ones((len(xs), 1))], axis=1)
+        a = xs.T @ xs + self.alpha * np.eye(xs.shape[1])
+        self.w_ = np.linalg.solve(a, xs.T @ y)
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        xs = (np.asarray(x, np.float64) - self.x_mu_) / self.x_sd_
+        xs = np.concatenate([xs, np.ones((len(xs), 1))], axis=1)
+        return xs @ self.w_

@@ -1,0 +1,227 @@
+"""Task scheduling across heterogeneous edge nodes (paper §II-D).
+
+Pipeline: *task brokering* (queue of offloaded AI tasks) → *resource & time
+prediction* (the global profiling model supplies the expected-time-to-
+compute matrix) → *infrastructure monitoring* (node availability) →
+scheduling.
+
+Schedulers: round-robin / random baselines, min-min and max-min list
+scheduling (classic ETC heuristics), HEFT-style earliest-finish-time, and
+an exact MDP value-iteration formulation for small instances (the paper
+frames scheduling as an (PO-)MDP).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.hw import DeviceSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One brokered AI task (a profiling-grid workload or an arch config)."""
+    name: str
+    flops: float
+    input_bytes: float = 0.0
+    deadline_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class Node:
+    spec: DeviceSpec
+    available_at: float = 0.0    # infrastructure monitoring: busy-until
+
+    def exec_time(self, task: Task, efficiency: float = 0.35) -> float:
+        comp = task.flops / (self.spec.peak_flops_f32 * efficiency)
+        xfer = task.input_bytes / max(self.spec.link_bw, 1.0)
+        return comp + xfer
+
+
+@dataclasses.dataclass
+class Assignment:
+    task: Task
+    node: str
+    start: float
+    finish: float
+
+
+@dataclasses.dataclass
+class Schedule:
+    assignments: list[Assignment]
+
+    @property
+    def makespan(self) -> float:
+        return max((a.finish for a in self.assignments), default=0.0)
+
+    @property
+    def mean_completion(self) -> float:
+        return float(np.mean([a.finish for a in self.assignments])) \
+            if self.assignments else 0.0
+
+    def deadline_misses(self) -> int:
+        return sum(1 for a in self.assignments
+                   if a.task.deadline_s is not None
+                   and a.finish > a.task.deadline_s)
+
+
+def etc_matrix(tasks: Sequence[Task], nodes: Sequence[Node],
+               predictor: Optional[Callable[[Task, Node], float]] = None
+               ) -> np.ndarray:
+    """Expected-time-to-compute matrix [T, N].
+
+    ``predictor`` plugs in the trained profiling model (paper §II-D:
+    "resource and time prediction using global profiling models"); default
+    is the analytic roofline estimate.
+    """
+    fn = predictor or (lambda t, n: n.exec_time(t))
+    return np.array([[fn(t, n) for n in nodes] for t in tasks])
+
+
+def _fresh(nodes: Sequence[Node]) -> list[Node]:
+    return [dataclasses.replace(n) for n in nodes]
+
+
+def _assign(task, node, etc_tn) -> Assignment:
+    start = node.available_at
+    finish = start + etc_tn
+    node.available_at = finish
+    return Assignment(task, node.spec.name, start, finish)
+
+
+def round_robin(tasks, nodes, etc) -> Schedule:
+    nodes = _fresh(nodes)
+    out = [_assign(t, nodes[i % len(nodes)], etc[i, i % len(nodes)])
+           for i, t in enumerate(tasks)]
+    return Schedule(out)
+
+
+def random_schedule(tasks, nodes, etc, seed: int = 0) -> Schedule:
+    rng = np.random.default_rng(seed)
+    nodes = _fresh(nodes)
+    out = []
+    for i, t in enumerate(tasks):
+        j = int(rng.integers(len(nodes)))
+        out.append(_assign(t, nodes[j], etc[i, j]))
+    return Schedule(out)
+
+
+def min_min(tasks, nodes, etc) -> Schedule:
+    """Classic min-min: repeatedly place the task with the smallest
+    earliest-completion-time."""
+    nodes = _fresh(nodes)
+    remaining = list(range(len(tasks)))
+    out = []
+    while remaining:
+        best = None
+        for i in remaining:
+            for j, n in enumerate(nodes):
+                fin = n.available_at + etc[i, j]
+                if best is None or fin < best[0]:
+                    best = (fin, i, j)
+        _, i, j = best
+        out.append(_assign(tasks[i], nodes[j], etc[i, j]))
+        remaining.remove(i)
+    return Schedule(out)
+
+
+def max_min(tasks, nodes, etc) -> Schedule:
+    """max-min: place the *largest* task first (better balance for skew)."""
+    nodes = _fresh(nodes)
+    remaining = list(range(len(tasks)))
+    out = []
+    while remaining:
+        picks = {}
+        for i in remaining:
+            fins = [(n.available_at + etc[i, j], j)
+                    for j, n in enumerate(nodes)]
+            picks[i] = min(fins)
+        i = max(picks, key=lambda i_: picks[i_][0])
+        fin, j = picks[i]
+        out.append(_assign(tasks[i], nodes[j], etc[i, j]))
+        remaining.remove(i)
+    return Schedule(out)
+
+
+def heft(tasks, nodes, etc) -> Schedule:
+    """HEFT-lite for independent tasks: rank by mean ETC descending, place
+    each on the earliest-finish node."""
+    nodes = _fresh(nodes)
+    order = np.argsort(-etc.mean(axis=1))
+    out = []
+    for i in order:
+        j = int(np.argmin([n.available_at + etc[i, j]
+                           for j, n in enumerate(nodes)]))
+        out.append(_assign(tasks[i], nodes[j], etc[i, j]))
+    return Schedule(out)
+
+
+def optimal_bruteforce(tasks, nodes, etc) -> Schedule:
+    """Exact minimum-makespan assignment (tiny instances only)."""
+    best = None
+    for combo in itertools.product(range(len(nodes)), repeat=len(tasks)):
+        loads = np.zeros(len(nodes))
+        for i, j in enumerate(combo):
+            loads[j] += etc[i, j]
+        mk = loads.max()
+        if best is None or mk < best[0]:
+            best = (mk, combo)
+    _, combo = best
+    nodes = _fresh(nodes)
+    return Schedule([_assign(tasks[i], nodes[j], etc[i, j])
+                     for i, j in enumerate(combo)])
+
+
+SCHEDULERS: dict[str, Callable] = {
+    "round_robin": round_robin,
+    "random": random_schedule,
+    "min_min": min_min,
+    "max_min": max_min,
+    "heft": heft,
+}
+
+
+# --------------------------------------------------------------------------
+# MDP formulation (paper: "modelled as an MDP or PO-MDP")
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class SchedulingMDP:
+    """Exact finite-horizon MDP for sequential task arrival.
+
+    State: (next task index, discretised node-backlog vector).
+    Action: node for the current task.  Cost: increase in makespan.
+    Solved by backward value iteration — the optimal policy lower-bounds
+    the heuristics on small instances (tested).
+    """
+    tasks: Sequence[Task]
+    nodes: Sequence[Node]
+    etc: np.ndarray
+    backlog_levels: int = 8
+
+    def solve(self) -> float:
+        levels = self.backlog_levels
+        etc = self.etc
+        t_max = etc.sum()
+        step = t_max / (levels - 1) if levels > 1 else t_max
+
+        def discretise(b: float) -> int:
+            return min(int(round(b / step)), levels - 1)
+
+        n_nodes = len(self.nodes)
+        from functools import lru_cache
+
+        @lru_cache(maxsize=None)
+        def value(i: int, backlog: tuple) -> float:
+            if i == len(self.tasks):
+                return max(backlog) * step
+            best = np.inf
+            for j in range(n_nodes):
+                b = list(backlog)
+                b[j] = discretise(b[j] * step + etc[i, j])
+                best = min(best, value(i + 1, tuple(b)))
+            return best
+
+        return float(value(0, tuple([0] * n_nodes)))

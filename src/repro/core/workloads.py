@@ -1,0 +1,154 @@
+"""The paper's Table I workload grid: CNN and MLP families × hyperparameters.
+
+These are the AI tasks whose execution the profiler characterises (paper
+§II-A / §III-A).  Exact configurations from Table I:
+
+  CNN types:
+    1. [{out_channels: 32, kernel: 5, pool}]
+    2. [{32, 5, pool}, {64, 3, pool}]
+    3. [{64, 5, pool}, {64, 3, pool}, {128, 3, pool}]
+  MLP types: [100, 50], [150, 100, 50], [200, 150, 100, 50]
+  Epochs: 5, 10, 15, 20
+  Optimisers: Adam, SGD, RMSprop, Adagrad
+  Learning rates: 0.01, 0.05, 0.001, 0.005, 0.0001, 0.0005
+  Batch sizes: 16, 32, 64, 128
+
+Images are 28×28×1 (MNIST-like synthetic), 10 classes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+IMG = 28
+NCLASS = 10
+
+CNN_TYPES: list[list[dict]] = [
+    [{"out": 32, "kernel": 5, "pool": True}],
+    [{"out": 32, "kernel": 5, "pool": True},
+     {"out": 64, "kernel": 3, "pool": True}],
+    [{"out": 64, "kernel": 5, "pool": True},
+     {"out": 64, "kernel": 3, "pool": True},
+     {"out": 128, "kernel": 3, "pool": True}],
+]
+MLP_TYPES: list[list[int]] = [[100, 50], [150, 100, 50], [200, 150, 100, 50]]
+EPOCHS = [5, 10, 15, 20]
+OPTIMISERS = ["adam", "sgd", "rmsprop", "adagrad"]
+LEARNING_RATES = [0.01, 0.05, 0.001, 0.005, 0.0001, 0.0005]
+BATCH_SIZES = [16, 32, 64, 128]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    """One cell of the Table I grid."""
+    kind: str                   # "cnn" | "mlp"
+    type_idx: int               # index into CNN_TYPES / MLP_TYPES
+    epochs: int
+    optimiser: str
+    lr: float
+    batch_size: int
+    dataset_size: int = 2048    # synthetic samples (paper varies data size)
+
+    @property
+    def arch(self):
+        return (CNN_TYPES if self.kind == "cnn" else MLP_TYPES)[self.type_idx]
+
+    def label(self) -> str:
+        return (f"{self.kind}{self.type_idx}-e{self.epochs}-{self.optimiser}"
+                f"-lr{self.lr}-b{self.batch_size}")
+
+
+def full_grid() -> Iterator[WorkloadConfig]:
+    """The complete Table I cross-product (2 kinds × 3 × 4 × 4 × 6 × 4 =
+    2,304 runs; the paper reports >3,000 including data-size variations)."""
+    for kind, n_types in (("cnn", len(CNN_TYPES)), ("mlp", len(MLP_TYPES))):
+        for ti, ep, op, lr, bs in itertools.product(
+                range(n_types), EPOCHS, OPTIMISERS, LEARNING_RATES,
+                BATCH_SIZES):
+            yield WorkloadConfig(kind, ti, ep, op, lr, bs)
+
+
+def sample_grid(n: int, seed: int = 0) -> list[WorkloadConfig]:
+    import numpy as np
+    grid = list(full_grid())
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(grid), size=min(n, len(grid)), replace=False)
+    return [grid[i] for i in sorted(idx)]
+
+
+# --------------------------------------------------------------------------
+# Model implementations (pure JAX)
+# --------------------------------------------------------------------------
+def init_workload_params(wc: WorkloadConfig, key) -> dict:
+    keys = jax.random.split(key, 16)
+    params: dict = {}
+    if wc.kind == "mlp":
+        dims = [IMG * IMG] + list(wc.arch) + [NCLASS]
+        for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+            params[f"w{i}"] = init_dense(keys[2 * i], (a, b), jnp.float32)
+            params[f"b{i}"] = jnp.zeros((b,), jnp.float32)
+        return params
+    # CNN: conv stack then a dense head
+    c_in, hw = 1, IMG
+    for i, layer in enumerate(wc.arch):
+        k = layer["kernel"]
+        params[f"conv{i}"] = init_dense(
+            keys[2 * i], (k, k, c_in, layer["out"]), jnp.float32,
+            scale=(k * k * c_in) ** -0.5)
+        params[f"cb{i}"] = jnp.zeros((layer["out"],), jnp.float32)
+        c_in = layer["out"]
+        if layer["pool"]:
+            hw //= 2
+    params["head_w"] = init_dense(keys[-1], (hw * hw * c_in, NCLASS),
+                                  jnp.float32)
+    params["head_b"] = jnp.zeros((NCLASS,), jnp.float32)
+    return params
+
+
+def workload_forward(params: dict, x: jax.Array, wc: WorkloadConfig):
+    """x: [B, 28, 28, 1] (cnn) or [B, 784] (mlp) → logits [B, 10]."""
+    if wc.kind == "mlp":
+        h = x.reshape(x.shape[0], -1)
+        n_layers = len(wc.arch) + 1
+        for i in range(n_layers):
+            h = h @ params[f"w{i}"] + params[f"b{i}"]
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return h
+    h = x.reshape(x.shape[0], IMG, IMG, 1)
+    for i, layer in enumerate(wc.arch):
+        h = jax.lax.conv_general_dilated(
+            h, params[f"conv{i}"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h + params[f"cb{i}"])
+        if layer["pool"]:
+            h = jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["head_w"] + params["head_b"]
+
+
+def workload_loss(params, batch, wc: WorkloadConfig):
+    logits = workload_forward(params, batch["x"], wc)
+    labels = batch["y"]
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, acc
+
+
+def synthetic_image_data(n: int, seed: int = 0):
+    """Class-conditional gaussian 'digit' blobs — learnable 10-class task."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(NCLASS, IMG, IMG, 1)).astype(np.float32)
+    y = rng.integers(0, NCLASS, size=n)
+    x = protos[y] + 0.8 * rng.normal(size=(n, IMG, IMG, 1)).astype(np.float32)
+    return x.astype(np.float32), y.astype(np.int32)

@@ -1,0 +1,104 @@
+"""Mesh-agnostic sharding-constraint hooks.
+
+Model code calls ``constrain(x, "activation")`` at a few strategic points
+(embeddings out, logits, MoE expert buffer).  Outside a mesh context this is
+the identity; inside (set up by the step builders in ``repro.launch``), it
+applies ``with_sharding_constraint`` with the logical→mesh axis mapping of
+the active mesh, so the same model code runs on CPU tests and on the
+(pod, data, model) production mesh.
+
+Logical axes:
+  dp  — batch/data parallel        → ("pod", "data") or ("data",)
+  tp  — tensor/model parallel      → ("model",)
+  sp  — sequence parallel (opt-in) → ("data",)  [used by §Perf hillclimbs]
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+# logical name -> PartitionSpec template (in logical axes)
+SPEC_TABLE = {
+    # [B, S, d]
+    "activation": ("dp", None, None),
+    # [B, S, d] with Megatron-style sequence parallelism: the residual
+    # stream (and the per-layer saved carries under remat) shard S over the
+    # tensor axis; GSPMD inserts the all-gather/reduce-scatter pair at the
+    # layer boundaries.
+    "activation_sp": ("dp", "tp", None),
+    # [B, S, V]
+    "logits": ("dp", None, "tp"),
+    # [E, C, d]
+    "moe_buffer": ("tp", None, None),
+    # [B, S, H, D]
+    "heads": ("dp", None, "tp", None),
+    # KV cache [B, S, Hkv, D]
+    "kv_cache": ("dp", None, None, None),
+    # KV cache, sequence-parallel variant (long-context decode hillclimb)
+    "kv_cache_sp": ("dp", "sp", None, None),
+}
+
+
+def _mapping() -> Optional[dict]:
+    return getattr(_state, "mapping", None)
+
+
+@contextlib.contextmanager
+def axis_mapping(mapping: dict[str, tuple[str, ...]], mesh=None):
+    """mapping: logical axis -> tuple of mesh axis names (or ())."""
+    prev = _mapping()
+    prev_mesh = getattr(_state, "mesh", None)
+    _state.mapping = mapping
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mapping = prev
+        _state.mesh = prev_mesh
+
+
+def current_mesh():
+    """The concrete mesh of the active step builder (None on CPU tests)."""
+    return getattr(_state, "mesh", None)
+
+
+def dp_axes() -> tuple[str, ...]:
+    m = _mapping()
+    return tuple(m.get("dp", ())) if m else ()
+
+
+def tp_axes() -> tuple[str, ...]:
+    m = _mapping()
+    return tuple(m.get("tp", ())) if m else ()
+
+
+def resolve(name: str) -> Optional[P]:
+    m = _mapping()
+    if m is None:
+        return None
+    template = SPEC_TABLE[name]
+    axes = []
+    for a in template:
+        if a is None:
+            axes.append(None)
+        else:
+            mesh_axes = m.get(a, ())
+            axes.append(mesh_axes if mesh_axes else None)
+    return P(*axes)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    spec = resolve(name)
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except ValueError:
+        # rank/axis mismatch (e.g. reduced smoke shapes) — skip constraint
+        return x

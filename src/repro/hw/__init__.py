@@ -1,0 +1,15 @@
+from repro.hw.specs import (
+    ALL_DEVICES,
+    EDGE_DEVICES,
+    TPU_V5E,
+    DeviceSpec,
+    get_device,
+)
+
+__all__ = [
+    "ALL_DEVICES",
+    "EDGE_DEVICES",
+    "TPU_V5E",
+    "DeviceSpec",
+    "get_device",
+]

@@ -1,0 +1,118 @@
+"""Flash-attention Pallas TPU kernel.
+
+Tiling: grid = (B, Hq, nq, nk) with the KV dimension innermost — TPU grids
+execute sequentially minor-to-major, so the online-softmax state
+(m, l, acc) lives in VMEM scratch and persists across the nk steps of one
+(b, h, iq) row block.  Block shapes are MXU-aligned (q/kv blocks default
+128×head_dim); GQA is handled in the index map (kv head = h // group).
+
+VMEM working set per step:
+  q block (qblk×D) + k,v blocks (kblk×D each) + scores (qblk×kblk f32)
+  + acc (qblk×D f32)  ≈ 0.5 MB at 128×128 — far under the 128 MB/core VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, valid_len: int,
+            qblk: int, kblk: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    row = iq * qblk + jax.lax.broadcasted_iota(jnp.int32, (qblk, kblk), 0)
+    col = ik * kblk + jax.lax.broadcasted_iota(jnp.int32, (qblk, kblk), 1)
+    ok = col < valid_len
+    if causal:
+        ok &= col <= row
+    if window:
+        ok &= (row - col) < window
+
+    # block is entirely masked when its first column exceeds the last row
+    live = jnp.logical_not(causal) | (ik * kblk <= iq * qblk + qblk - 1)
+    if window:
+        live &= (iq * qblk >= ik * kblk) | (
+            (iq + 1) * qblk - 1 - ik * kblk < window + qblk)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [qblk, D]
+        k = k_ref[0, 0].astype(jnp.float32)                # [kblk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        o = acc_scr[...] / jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal=True, window=0, scale=None,
+                           qblk=128, kblk=128, valid_len=0,
+                           interpret=True):
+    """q [B,Hq,Sq,D], k/v [B,Hkv,Sk,D] (seq already block-padded).
+
+    Returns [B,Hq,Sq,D] in q.dtype.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    qblk = min(qblk, sq)
+    kblk = min(kblk, sk)
+    assert sq % qblk == 0 and sk % kblk == 0
+    nq, nk = sq // qblk, sk // kblk
+    scale = scale if scale is not None else d ** -0.5
+    valid_len = valid_len or sk
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        valid_len=valid_len, qblk=qblk, kblk=kblk, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, qblk, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, kblk, d),
+                         lambda b_, h, iq, ik: (b_, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, kblk, d),
+                         lambda b_, h, iq, ik: (b_, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qblk, d),
+                               lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qblk, 1), jnp.float32),
+            pltpu.VMEM((qblk, 1), jnp.float32),
+            pltpu.VMEM((qblk, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,39 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+Accepts model-layout tensors (q [B,S,Hq,D]), pads sequences to block
+multiples, transposes to the kernel layout, and dispatches to the Pallas
+kernel (``interpret=True`` on non-TPU backends so the same code validates
+on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "qblk", "kblk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    qblk=128, kblk=128, interpret=None):
+    """q [B,S,Hq,D], k/v [B,S,Hkv,D] → [B,S,Hq,D]."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+    qblk = min(qblk, sq)
+    kblk = min(kblk, sk)
+    pq, pk = (-sq) % qblk, (-sk) % kblk
+    qt = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    kt = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vt = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    out = flash_attention_kernel(
+        qt, kt, vt, causal=causal, window=window, scale=scale, qblk=qblk,
+        kblk=kblk, valid_len=sk, interpret=interp)
+    return out.transpose(0, 2, 1, 3)[:, :sq]

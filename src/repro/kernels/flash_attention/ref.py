@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None,
+                  valid_len=0):
+    """q [B,Hq,Sq,D], k/v [B,Hkv,Sk,D] → [B,Hq,Sq,D]."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    valid_len = valid_len or sk
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    row = jnp.arange(sq)[:, None]
+    col = jnp.arange(sk)[None, :]
+    ok = col < valid_len
+    if causal:
+        ok &= col <= row
+    if window:
+        ok &= (row - col) < window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (all NEG_INF) should produce 0, not NaN
+    any_ok = ok.any(axis=-1)[None, None, :, None]
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    out = jnp.where(any_ok, out, 0.0)
+    return out.astype(q.dtype)

@@ -1,0 +1,24 @@
+"""Public wrapper: numpy in/out for the GBT training loop."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gbt_hist.kernel import grad_histogram_kernel
+
+_jitted_cache: dict = {}
+
+
+def grad_histogram(codes: np.ndarray, grad: np.ndarray, n_bins: int
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Drop-in for the numpy histogram in ``repro.core.predictors.gbt``."""
+    interpret = jax.default_backend() != "tpu"
+    key = ("h", n_bins, interpret)
+    if key not in _jitted_cache:
+        _jitted_cache[key] = jax.jit(
+            lambda c, g: grad_histogram_kernel(c, g, n_bins,
+                                               interpret=interpret))
+    gsum, cnt = _jitted_cache[key](
+        jnp.asarray(codes, jnp.int32), jnp.asarray(grad, jnp.float32))
+    return np.asarray(gsum, np.float64), np.asarray(cnt, np.float64)

@@ -1,0 +1,15 @@
+"""Pure oracle for the gradient-histogram kernel (numpy bincount)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def grad_histogram_ref(codes: np.ndarray, grad: np.ndarray, n_bins: int):
+    """codes [N,F] int, grad [N] → (gsum [F,bins] f64, cnt [F,bins] f64)."""
+    n, f = codes.shape
+    flat = codes.astype(np.int64) + np.arange(f)[None, :] * n_bins
+    gsum = np.bincount(flat.ravel(), weights=np.repeat(grad, f),
+                       minlength=f * n_bins).reshape(f, n_bins)
+    cnt = np.bincount(flat.ravel(), minlength=f * n_bins
+                      ).reshape(f, n_bins).astype(np.float64)
+    return gsum, cnt

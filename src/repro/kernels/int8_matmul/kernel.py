@@ -1,0 +1,66 @@
+"""W8A16 matmul Pallas TPU kernel: int8 weights × bf16/f32 activations.
+
+§Perf pair A ended weight-read-bound (B=1 long-context decode reads every
+parameter per token).  Int8 weights halve that HBM traffic; the dequant
+(per-output-channel scale) happens in VMEM right before the MXU dot, so
+HBM sees only int8.
+
+Tiling: grid (M/bm, N/bn, K/bk) with K innermost; the f32 accumulator
+lives in VMEM scratch across the K steps.  bk×bn int8 weight tiles +
+bm×bk activation tiles are MXU-aligned multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, scale_ref, o_ref, acc_scr, *, nk: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...].astype(jnp.float32)                 # [bm, bk]
+    w = w_ref[...].astype(jnp.float32)                 # [bk, bn] (dequant ↓)
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        scale = scale_ref[...].astype(jnp.float32)     # [1, bn]
+        o_ref[...] = (acc_scr[...] * scale).astype(o_ref.dtype)
+
+
+def int8_matmul_kernel(x, w_q, scale, *, bm=128, bn=128, bk=128,
+                       interpret=True):
+    """x [M,K] (bf16/f32) × w_q [K,N] int8 (+ scale [N]) → [M,N] x.dtype.
+
+    Per-output-channel symmetric quantisation: w ≈ w_q * scale[None, :].
+    M/K/N must be multiples of the block sizes (ops.py pads).
+    """
+    m, k = x.shape
+    _, n = w_q.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+    kernel = functools.partial(_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_q, scale.reshape(1, n))

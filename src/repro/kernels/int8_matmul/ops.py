@@ -1,0 +1,30 @@
+"""Jit'd wrapper for the W8A16 matmul kernel (pads to MXU tiles)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_matmul.kernel import int8_matmul_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def int8_matmul(x, w_q, scale, *, bm=128, bn=128, bk=128, interpret=None):
+    """x [..., K] × w_q [K, N] int8 → [..., N]."""
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w_q.shape[1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    pm, pn, pk = (-m) % bm_, (-n) % bn_, (-k) % bk_
+    if pm or pk:
+        x2 = jnp.pad(x2, ((0, pm), (0, pk)))
+    wq = jnp.pad(w_q, ((0, pk), (0, pn))) if (pk or pn) else w_q
+    sc = jnp.pad(scale, ((0, pn),)) if pn else scale
+    out = int8_matmul_kernel(x2, wq, sc, bm=bm_, bn=bn_, bk=bk_,
+                             interpret=interp)
+    return out[:m, :n].reshape(*lead, n)

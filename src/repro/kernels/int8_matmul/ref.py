@@ -1,0 +1,28 @@
+"""Oracle + quantiser for the W8A16 matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize(w: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-output-channel symmetric int8. w [K,N] → (w_q int8, scale [N])."""
+    w = np.asarray(w, np.float32)
+    amax = np.abs(w).max(axis=0)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    w_q = np.clip(np.round(w / scale[None, :]), -127, 127).astype(np.int8)
+    return w_q, scale
+
+
+def int8_matmul_ref(x, w_q, scale):
+    """x [M,K] × dequant(w_q, scale) — pure jnp."""
+    w = w_q.astype(jnp.float32) * scale[None, :].astype(jnp.float32)
+    return jnp.matmul(x.astype(jnp.float32), w).astype(x.dtype)
+
+
+def quant_error_bound(w: np.ndarray) -> float:
+    """Max relative dequant error (≤ 1/254 per channel by construction)."""
+    w_q, scale = quantize(w)
+    deq = w_q.astype(np.float32) * scale[None, :]
+    denom = np.maximum(np.abs(w).max(axis=0), 1e-9)
+    return float((np.abs(deq - w) / denom[None, :]).max())

@@ -1,0 +1,103 @@
+"""Chunked SSD (Mamba2) scan Pallas TPU kernel.
+
+One (batch·head) row of the SSD recurrence per grid row; the chunk
+dimension is innermost and sequential, carrying the [P, N] state in VMEM
+scratch.  Within a chunk everything is dense matmul on the MXU:
+
+    y_intra = (C Bᵀ ∘ decay-mask) (dt·x)        [Q,Q] @ [Q,P]
+    y_inter = exp(csum) · (C Hᵀ)                [Q,N] @ [N,P]
+    H'      = exp(total)·H + (dt·x)ᵀ (B ∘ decay-out)
+
+This is the TPU-native form of the paper-adjacent SSD kernel: block-dense
+tiles instead of the CUDA selective-scan (DESIGN.md §2).
+
+VMEM per step: x (Q×P) + B,C (Q×N) + tiles (Q×Q) + state (P×N)
+≈ 0.4 MB at Q=128, P=64, N=64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xdt_ref, loga_ref, b_ref, c_ref, y_ref, state_out_ref,
+            state_scr, *, q: int, nc: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xdt = xdt_ref[0, 0].astype(jnp.float32)          # [Q, P]
+    loga = loga_ref[0, 0].astype(jnp.float32)        # [Q, 1]
+    bb = b_ref[0, 0].astype(jnp.float32)             # [Q, N]
+    cc = c_ref[0, 0].astype(jnp.float32)             # [Q, N]
+
+    csum = jnp.cumsum(loga, axis=0)                  # [Q,1] inclusive
+    total = csum[q - 1]                              # [1]
+    state = state_scr[...]                           # [P, N]
+
+    # inter-chunk: carried state contribution
+    y_inter = jax.lax.dot_general(cc, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(csum)                # [Q, P]
+
+    # intra-chunk dense causal tile
+    rel = csum - csum.reshape(1, q)                  # [Q, Q]
+    causal = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+              >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1))
+    gate = jnp.where(causal, jnp.exp(rel), 0.0)
+    scores = jax.lax.dot_general(cc, bb, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y_intra = jax.lax.dot_general(scores * gate, xdt,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_ref[0, 0] = (y_inter + y_intra).astype(y_ref.dtype)
+
+    # state update
+    decay_out = jnp.exp(total[None, :] - csum)       # [Q,1]
+    bw = bb * decay_out                              # [Q,N]
+    upd = jax.lax.dot_general(xdt, bw, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [P,N]
+    state_scr[...] = state * jnp.exp(total[0]) + upd
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        state_out_ref[0] = state_scr[...].astype(state_out_ref.dtype)
+
+
+def ssd_scan_kernel(xdt, loga, b, c, *, n_heads_per_batch: int,
+                    interpret: bool = True):
+    """xdt [BH, nc, Q, P]; loga [BH, nc, Q, 1]; b/c [B, nc, Q, N]
+    (heads share B/C — the index map fans them out).
+
+    Returns (y [BH, nc, Q, P] f32, state [BH, P, N] f32).
+    """
+    bh, nc, q, p = xdt.shape
+    n = b.shape[-1]
+    h = n_heads_per_batch
+    kernel = functools.partial(_kernel, q=q, nc=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, ic: (i, ic, 0, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda i, ic: (i, ic, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, ic: (i // h, ic, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, ic: (i // h, ic, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, ic: (i, ic, 0, 0)),
+            pl.BlockSpec((1, p, n), lambda i, ic: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, q, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xdt, loga, b, c)

@@ -1,0 +1,48 @@
+"""Jit'd wrapper: model-layout SSD scan via the Pallas kernel.
+
+Mirrors :func:`repro.models.mamba2.ssd_chunked` (same inputs/outputs) so
+the model can swap implementations on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssd_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_kernel(x, dt, a_log, b, c, d_skip, chunk: int = 128,
+                       interpret: bool | None = None):
+    """x [B,S,H,P]; dt [B,S,H]; b/c [B,S,N]; returns (y, state [B,H,P,N])."""
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // q
+
+    log_a = (-jnp.exp(a_log.astype(jnp.float32))[None, None, :]
+             * dt.astype(jnp.float32))                       # [B,S',H]
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    # [B,S',H,P] -> [B,H,nc,Q,P] -> [BH,nc,Q,P]
+    xdt_k = xdt.transpose(0, 2, 1, 3).reshape(bsz * h, nc, q, p)
+    loga_k = log_a.transpose(0, 2, 1).reshape(bsz * h, nc, q, 1)
+    b_k = b.astype(jnp.float32).reshape(bsz, nc, q, n)
+    c_k = c.astype(jnp.float32).reshape(bsz, nc, q, n)
+
+    y_k, state_k = ssd_scan_kernel(xdt_k, loga_k, b_k, c_k,
+                                   n_heads_per_batch=h, interpret=interp)
+    y = y_k.reshape(bsz, h, nc * q, p).transpose(0, 2, 1, 3)[:, :s]
+    y = y + (d_skip.astype(jnp.float32)[None, None, :, None]
+             * x.astype(jnp.float32)[:, :s])
+    return y, state_k.reshape(bsz, h, p, n)

@@ -1,0 +1,28 @@
+"""Sequential-recurrence oracle for the SSD scan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ssd_scan_ref(xdt, loga, b, c, *, n_heads_per_batch: int):
+    """Step-by-step recurrence, numpy. Shapes as in ssd_scan_kernel."""
+    xdt = np.asarray(xdt, np.float64)
+    loga = np.asarray(loga, np.float64)
+    b = np.asarray(b, np.float64)
+    c = np.asarray(c, np.float64)
+    bh, nc, q, p = xdt.shape
+    n = b.shape[-1]
+    h = n_heads_per_batch
+    y = np.zeros((bh, nc, q, p))
+    state = np.zeros((bh, p, n))
+    for i in range(bh):
+        bi = i // h
+        st = np.zeros((p, n))
+        for ic in range(nc):
+            for t in range(q):
+                a = np.exp(loga[i, ic, t, 0])
+                st = st * a + np.outer(xdt[i, ic, t], b[bi, ic, t])
+                y[i, ic, t] = st @ c[bi, ic, t]
+        state[i] = st
+    return y.astype(np.float32), state.astype(np.float32)

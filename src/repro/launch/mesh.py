@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches JAX device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any JAX
+import, and smoke tests/benches must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 = 256 chips (data, model).
+    Multi-pod: 2×16×16 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices: int = 4):
+    """Tiny mesh for CPU-subprocess dry-run tests (2 × devices//2)."""
+    return jax.make_mesh((devices // 2, 2), ("data", "model"))
+
+
+def axis_mapping_for(mesh) -> dict:
+    """Logical→mesh axis mapping used by sharding constraints."""
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    return {"dp": dp, "tp": ("model",) if "model" in names else (),
+            "sp": ("data",) if "data" in names else ()}

@@ -1,0 +1,233 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch × shape).
+
+These are the functions the dry-run lowers and the launchers execute:
+
+  * ``train_step``  — fwd + bwd + optimiser update        (train_4k)
+  * ``prefill_step``— prompt forward, builds the KV cache (prefill_32k)
+  * ``serve_step``  — ONE new token against a seq_len cache (decode shapes)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — shardable,
+no device allocation — for every model input, per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed import sharding as shd
+from repro.distributed.context import axis_mapping
+from repro.launch.mesh import axis_mapping_for
+from repro.models import build_model
+from repro.optim import adamw, apply_updates
+
+PyTree = Any
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+# --------------------------------------------------------------------------
+# Input specs (deliverable e.2)
+# --------------------------------------------------------------------------
+def batch_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for the *batch* argument of the step function."""
+    b, s = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.dtype)
+    if shape.mode == "train":
+        if cfg.family == "audio":
+            return {"frames": sds((b, cfg.enc_seq, cfg.d_model), act),
+                    "tokens": sds((b, s + 1), jnp.int32)}
+        if cfg.family == "vlm":
+            return {"embeds": sds((b, s, cfg.d_model), act),
+                    "labels": sds((b, s), jnp.int32)}
+        return {"tokens": sds((b, s + 1), jnp.int32)}
+    if shape.mode == "prefill":
+        if cfg.family == "audio":
+            return {"frames": sds((b, cfg.enc_seq, cfg.d_model), act),
+                    "tokens": sds((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            return {"embeds": sds((b, s, cfg.d_model), act)}
+        return {"tokens": sds((b, s), jnp.int32)}
+    # decode: ONE token; the cache is a separate argument
+    return {"token": sds((b, 1), jnp.int32)}
+
+
+def cache_input_specs(api, shape: InputShape) -> PyTree:
+    """ShapeDtypeStructs for the decode cache at seq_len occupancy."""
+    shapes = api.cache_shapes(shape.global_batch, shape.seq_len)
+    return jax.tree_util.tree_map(
+        lambda sd: sds(sd[0], sd[1]), shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, api=None) -> dict:
+    """All step inputs as ShapeDtypeStructs (params/opt built separately)."""
+    specs = {"batch": batch_input_specs(cfg, shape)}
+    if shape.mode == "decode":
+        api = api or build_model(cfg)
+        specs["cache"] = cache_input_specs(api, shape)
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Step functions
+# --------------------------------------------------------------------------
+def build_train_step(api, opt) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            api.train_loss, has_aux=True)(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, metrics
+    return train_step
+
+
+def build_prefill_step(api, max_len: Optional[int] = None) -> Callable:
+    def prefill_step(params, batch):
+        ml = max_len
+        if ml is None:
+            key = ("tokens" if "tokens" in batch else
+                   "embeds" if "embeds" in batch else "frames")
+            ml = batch[key].shape[1]
+        return api.prefill(params, batch, ml)
+    return prefill_step
+
+
+def build_serve_step(api) -> Callable:
+    def serve_step(params, batch, cache):
+        return api.decode_step(params, batch, cache)
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# Jit assembly with shardings (used by dryrun + launchers)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class LoweredStep:
+    name: str
+    jitted: Any
+    arg_specs: tuple            # ShapeDtypeStructs to pass to .lower()
+    shard_report: shd.ShardingReport
+
+
+def _opt_state_specs(opt_state_sds, pspecs):
+    """Mirror param specs onto optimiser-state trees (m/v/acc/mu/nu)."""
+    def mk(leaf_sds, template_name):
+        del leaf_sds, template_name
+        return None
+
+    out = {}
+    for k, v in opt_state_sds.items():
+        if k == "step":
+            out[k] = P()
+        else:
+            out[k] = pspecs
+    return out
+
+
+def assemble(cfg: ModelConfig, shape: InputShape, mesh, *,
+             opt=None, seq_shard_cache: bool = False,
+             extra_cfg_kw: Optional[dict] = None,
+             auto_knobs: bool = True) -> LoweredStep:
+    """Build the jitted step + arg ShapeDtypeStructs for one (arch, shape)."""
+    if extra_cfg_kw:
+        cfg = cfg.replace(**extra_cfg_kw)
+        auto_knobs = False            # explicit knobs win (perf experiments)
+    api = build_model(cfg)
+    mode = "train" if shape.mode == "train" else "serve"
+    pshapes = api.param_shapes()
+    # §Perf B1 (adopted): FSDP all-gathers cost more than they save for
+    # small models — replicate params below 0.5B
+    from repro.models import param_count
+    import os as _os
+    no_fsdp = (mode == "train" and param_count(pshapes) < 5e8
+               and not _os.environ.get("REPRO_FORCE_FSDP"))
+    pspecs, report = shd.param_specs(cfg, pshapes, mesh, mode=mode,
+                                     no_fsdp=no_fsdp)
+    params_sds = jax.eval_shape(api.init_params, jax.random.key(0))
+    bspecs = shd.batch_specs(cfg, jax.tree_util.tree_map(
+        lambda x: x.shape, batch_input_specs(cfg, shape)), mesh)
+    batch_sds = batch_input_specs(cfg, shape)
+    named = lambda t: shd.to_named(t, mesh)
+    mapping = axis_mapping_for(mesh)
+
+    def with_mapping(fn):
+        # the mapping must be active while the function is TRACED (at
+        # .lower()), not merely when jax.jit is constructed
+        def wrapped(*args):
+            with axis_mapping(mapping, mesh=mesh):
+                return fn(*args)
+        return wrapped
+
+    if shape.mode == "train":
+        axis = dict(mesh.shape)
+        tp = axis.get("model", 1)
+        kw = {}
+        # §Perf C: SP's residual all-gathers around the MoE shard_map cost
+        # ~15x more collective time than they save — SP is dense-only
+        if auto_knobs and tp > 1 and shape.seq_len % tp == 0 \
+                and not cfg.seq_parallel and not cfg.num_experts:
+            kw["seq_parallel"] = True        # Megatron-SP residual stream
+        if auto_knobs and not cfg.loss_chunk and cfg.vocab_size >= 32000:
+            kw["loss_chunk"] = 512           # chunked vocab-parallel xent
+        if kw:
+            cfg = cfg.replace(**kw)
+            api = build_model(cfg)
+            pspecs, report = shd.param_specs(cfg, api.param_shapes(), mesh,
+                                             mode=mode, no_fsdp=no_fsdp)
+            params_sds = jax.eval_shape(api.init_params, jax.random.key(0))
+        opt = opt or adamw(1e-4)
+        step = build_train_step(api, opt)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        ospecs = _opt_state_specs(opt_sds, pspecs)
+        jitted = jax.jit(
+            with_mapping(step),
+            in_shardings=(named(pspecs), named(ospecs), named(bspecs)),
+            out_shardings=(named(pspecs), named(ospecs), None, None),
+            donate_argnums=(0, 1),
+        )
+        return LoweredStep(f"{cfg.name}/{shape.name}/train", jitted,
+                           (params_sds, opt_sds, batch_sds), report)
+
+    if shape.mode == "prefill":
+        step = build_prefill_step(api, max_len=shape.seq_len)
+        jitted = jax.jit(
+            with_mapping(step),
+            in_shardings=(named(pspecs), named(bspecs)))
+        return LoweredStep(f"{cfg.name}/{shape.name}/prefill", jitted,
+                           (params_sds, batch_sds), report)
+
+    # decode
+    step = build_serve_step(api)
+    cache_sds = cache_input_specs(api, shape)
+    cspecs = shd.cache_specs(
+        cfg, jax.tree_util.tree_map(lambda x: (x.shape, x.dtype), cache_sds),
+        mesh, seq_shard=seq_shard_cache)
+    jitted = jax.jit(
+        with_mapping(step),
+        in_shardings=(named(pspecs), named(bspecs), named(cspecs)),
+        out_shardings=(None, named(cspecs)),
+        donate_argnums=(2,),
+    )
+    return LoweredStep(f"{cfg.name}/{shape.name}/decode", jitted,
+                       (params_sds, batch_sds, cache_sds), report)
+
+
+def arch_shape_cfg(cfg: ModelConfig, shape: InputShape) -> Optional[ModelConfig]:
+    """Shape-dependent config adaptation + skip policy (DESIGN.md §4).
+
+    Returns the adapted config, or None if the pair is skipped.
+    """
+    if shape.name.startswith("long_500k"):
+        if cfg.family == "audio":
+            return None               # principled skip (DESIGN.md §4)
+        if cfg.family in ("dense", "vlm"):
+            # sliding-window variant bounds cache memory at 512k context
+            return cfg.with_window(8192)
+    return cfg

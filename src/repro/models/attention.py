@@ -1,0 +1,322 @@
+"""Attention: GQA/MQA, sliding-window, qk-norm, chunked (flash-style) prefill.
+
+Three execution paths, all numerically equivalent (tested against each other):
+
+  * ``naive``   — materialises the full score matrix; oracle + tiny models.
+  * ``chunked`` — pure-JAX online-softmax over KV blocks (lax.scan), bounding
+                  HLO temporaries to O(block²) — the dry-run/compile path that
+                  keeps 32k-prefill memory honest. This is the jnp twin of the
+                  Pallas flash kernel in ``repro.kernels.flash_attention``.
+  * ``decode``  — one-token query against a (possibly ring-buffered) KV cache.
+
+Shapes: q [B,Sq,Hq,D], k/v [B,Skv,Hkv,D]; grouping G = Hq // Hkv.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+NEG_INF = -1e30
+
+
+def _group(q: jax.Array, n_kv: int) -> jax.Array:
+    """[B,S,Hq,D] -> [B,S,Hkv,G,D]."""
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, d)
+
+
+def _mask_bias(pos_q: jax.Array, pos_k: jax.Array, causal: bool,
+               window: int, valid_k=None) -> jax.Array:
+    """Additive bias [..., Sq, Sk] from absolute positions."""
+    dq = pos_q[..., :, None]
+    dk = pos_k[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), dtype=bool)
+    if causal:
+        ok &= dk <= dq
+    if window:
+        ok &= (dq - dk) < window
+    if valid_k is not None:
+        ok &= valid_k[..., None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, pos_q=None,
+                    pos_k=None, valid_k=None, scale=None):
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    if pos_q is None:
+        pos_q = jnp.arange(sq)
+    if pos_k is None:
+        pos_k = jnp.arange(sk)
+    scale = scale if scale is not None else d ** -0.5
+    qg = _group(q, hkv)                                       # [B,Sq,Hkv,G,D]
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    bias = _mask_bias(pos_q, pos_k, causal, window, valid_k)  # [...,Sq,Sk]
+    scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, v.shape[-1]).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_chunk=512,
+                      kv_chunk=512, scale=None):
+    """Flash-style attention; pads to chunk multiples and delegates to
+    :func:`flash_attention` (which carries the flash custom VJP)."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    pq = (-sq) % q_chunk
+    pk = (-sk) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    out = flash_attention(qp, kp, vp, causal, window, scale, q_chunk,
+                          kv_chunk, sk)
+    return out[:, :sq]
+
+
+# --------------------------------------------------------------------------
+# Flash attention with a flash *backward* (custom_vjp)
+#
+# Differentiating the chunked scan directly would store every exp-score
+# block (O(S²) residuals — measured 8 GiB/block-row on qwen3 train_4k).
+# The custom VJP recomputes scores blockwise from the saved logsumexp, which
+# is exactly what the Pallas TPU kernel does on-chip.
+# --------------------------------------------------------------------------
+def _flash_fwd_inner(q, k, v, causal, window, scale, q_chunk, kv_chunk,
+                     valid_len):
+    """Returns (out [B,Sq,Hq,Dv], lse [B,Hkv,G,Sq])."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    qg = _group(q, hkv).reshape(b, nq, q_chunk, hkv, g, d) \
+        .transpose(1, 0, 3, 4, 2, 5)                    # [nq,B,Hkv,G,qc,D]
+    kc = k.reshape(b, nk, kv_chunk, hkv, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nk, kv_chunk, hkv, dv).transpose(1, 0, 3, 2, 4)
+
+    def q_block(_, qi_qb):
+        qi, qb = qi_qb
+        pos_q = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_block(state, ki_kv):
+            ki, kb, vb = ki_kv
+            m, l, acc = state
+            pos_k = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            ok = pos_k[None, :] <= pos_q[:, None] if causal else \
+                jnp.ones((q_chunk, kv_chunk), bool)
+            if window:
+                ok &= (pos_q[:, None] - pos_k[None, :]) < window
+            ok &= (pos_k < valid_len)[None, :]
+            s = s + jnp.where(ok, 0.0, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                      (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_block, None, (jnp.arange(nq), qg))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, hq, dv)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, hkv, g, sq)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal=True, window=0, scale=None,
+                    q_chunk=512, kv_chunk=512, valid_len=0):
+    """Memory-bounded attention, O(block²) temporaries in fwd AND bwd.
+
+    Sq/Skv must be multiples of the chunk sizes (callers pad; chunk sizes
+    are clamped in ``chunked_attention``).
+    """
+    d = q.shape[-1]
+    scale_v = scale if scale is not None else d ** -0.5
+    out, _ = _flash_fwd_inner(q, k, v, causal, window, scale_v,
+                              q_chunk, kv_chunk, valid_len or k.shape[1])
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, scale, q_chunk, kv_chunk, valid_len):
+    d = q.shape[-1]
+    scale_v = scale if scale is not None else d ** -0.5
+    out, lse = _flash_fwd_inner(q, k, v, causal, window, scale_v,
+                                q_chunk, kv_chunk, valid_len or k.shape[1])
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, scale, q_chunk, kv_chunk, valid_len, res, do):
+    q, k, v, out, lse = res
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale_v = scale if scale is not None else d ** -0.5
+    nk = sk // kv_chunk
+
+    qg = _group(q, hkv).astype(jnp.float32)                 # [B,Sq,Hkv,G,D]
+    og = _group(out, hkv).astype(jnp.float32)               # [B,Sq,Hkv,G,Dv]
+    dog = _group(do, hkv).astype(jnp.float32)
+    delta = (og * dog).sum(-1)                              # [B,Sq,Hkv,G]
+    pos_q = jnp.arange(sq)
+    kc_all = k.reshape(b, nk, kv_chunk, hkv, d).transpose(1, 0, 3, 2, 4)
+    vc_all = v.reshape(b, nk, kv_chunk, hkv, dv).transpose(1, 0, 3, 2, 4)
+
+    def kv_block(dq_acc, inp):
+        ki, kb, vb = inp                                    # [B,Hkv,kc,*]
+        pos_k = ki * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqhgd,bhkd->bhgqk", qg,
+                       kb.astype(jnp.float32)) * scale_v
+        ok = pos_k[None, :] <= pos_q[:, None] if causal else \
+            jnp.ones((sq, kv_chunk), bool)
+        if window:
+            ok &= (pos_q[:, None] - pos_k[None, :]) < window
+        ok &= (pos_k < (valid_len or sk))[None, :]
+        s = s + jnp.where(ok, 0.0, NEG_INF)[None, None, None]
+        p = jnp.exp(s - lse.transpose(0, 1, 2, 3)[..., None])  # [B,h,g,Sq,kc]
+        dvb = jnp.einsum("bhgqk,bqhgd->bhkd", p, dog)
+        dp = jnp.einsum("bqhgd,bhkd->bhgqk", dog, vb.astype(jnp.float32))
+        ds = p * (dp - delta.transpose(0, 2, 3, 1)[..., None]) * scale_v
+        dkb = jnp.einsum("bhgqk,bqhgd->bhkd", ds, qg)
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bqhgd", ds,
+                                     kb.astype(jnp.float32))
+        return dq_acc, (dkb, dvb)
+
+    dq0 = jnp.zeros((b, sq, hkv, g, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_block, dq0,
+                                  (jnp.arange(nk), kc_all, vc_all))
+    dk = dks.transpose(1, 0, 3, 2, 4).reshape(b, sk, hkv, d)
+    dv_ = dvs.transpose(1, 0, 3, 2, 4).reshape(b, sk, hkv, dv)
+    return (dq.reshape(b, sq, hq, d).astype(q.dtype),
+            dk.astype(k.dtype), dv_.astype(v.dtype))
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, scale=None):
+    """One-token attention against a cache.
+
+    q [B,1,Hq,D]; caches [B,Smax,Hkv,D]; ``pos`` — the absolute position of
+    the query token: scalar int32, or [B] int32 for ragged per-slot
+    positions (continuous batching). With ``window > 0`` the cache is a
+    ring buffer of size Smax == window (slot = abs_pos % window); otherwise
+    it is linear and slots ≤ pos are valid.
+    """
+    b, _, hq, d = q.shape
+    _, smax, hkv, _ = k_cache.shape
+    scale = scale if scale is not None else d ** -0.5
+    slots = jnp.arange(smax)
+    pos_v = jnp.broadcast_to(jnp.asarray(pos), (b,))           # [B]
+    if window:
+        # absolute position held by each ring slot (after this step's write)
+        abs_pos = pos_v[:, None] - jnp.mod(pos_v[:, None] - slots[None, :],
+                                           window)
+        valid = abs_pos >= 0                                    # [B,Smax]
+    else:
+        valid = slots[None, :] <= pos_v[:, None]                # [B,Smax]
+    qg = _group(q, hkv)[:, 0]                                  # [B,Hkv,G,D]
+    # native-dtype dot against the cache (no materialised f32 cache copy);
+    # softmax statistics still run in f32
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg,
+                   k_cache.astype(q.dtype)).astype(jnp.float32) * scale
+    s = s + jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, hq, v_cache.shape[-1]).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Full GQA attention layer (projections + rope + qk-norm + attention)
+# --------------------------------------------------------------------------
+def attn_param_shapes(cfg) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    shapes = {
+        "wq": (d, hq * hd),
+        "wk": (d, hkv * hd),
+        "wv": (d, hkv * hd),
+        "wo": (hq * hd, d),
+    }
+    if cfg.use_qk_norm:
+        shapes["q_norm_scale"] = (hd,)
+        shapes["k_norm_scale"] = (hd,)
+    return shapes
+
+
+def _project_qkv(params, x, cfg, positions):
+    from repro.models.layers import matmul
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = matmul(x, params["wq"]).reshape(b, s, hq, hd)
+    k = matmul(x, params["wk"]).reshape(b, s, hkv, hd)
+    v = matmul(x, params["wv"]).reshape(b, s, hkv, hd)
+    if cfg.use_qk_norm:
+        q = rms_norm(q, params["q_norm_scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm_scale"], cfg.norm_eps)
+    if cfg.use_rope:
+        from repro.models.layers import apply_rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_self_attention(params, x, cfg, *, positions, impl="chunked"):
+    """Self-attention over a full segment (train / prefill). Returns (out, (k, v))."""
+    from repro.models.layers import matmul
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if impl == "naive":
+        out = naive_attention(q, k, v, causal=True, window=cfg.window)
+    else:
+        out = chunked_attention(q, k, v, causal=True, window=cfg.window)
+    b, s, hq, hd = q.shape
+    return matmul(out.reshape(b, s, hq * hd), params["wo"]), (k, v)
+
+
+def gqa_decode_attention(params, x, cfg, *, k_cache, v_cache, pos):
+    """One-token self-attention; returns (out, (new_k_cache, new_v_cache)).
+
+    ``pos`` is the absolute position of the incoming token — scalar, or [B]
+    for ragged continuous-batching slots.  The new K/V are written at slot
+    ``pos % window`` (ring) or ``pos`` (linear) and attention runs over the
+    updated cache.
+    """
+    from repro.models.layers import matmul
+    b = x.shape[0]
+    pos_arr = jnp.asarray(pos)
+    positions = jnp.broadcast_to(
+        pos_arr.astype(jnp.int32), (b,))[:, None] if pos_arr.ndim \
+        else jnp.full((b, 1), pos_arr, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    slot = jnp.mod(pos_arr, cfg.window) if cfg.window else pos_arr
+    if pos_arr.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, 1)
+    else:
+        # per-row write positions (ragged continuous-batching slots)
+        upd = jax.vmap(
+            lambda c, kk, s_: jax.lax.dynamic_update_slice_in_dim(
+                c, kk, s_, axis=0))
+        k_cache = upd(k_cache, k, slot)
+        v_cache = upd(v_cache, v, slot)
+    out = decode_attention(q, k_cache, v_cache, pos_arr, window=cfg.window)
+    _, _, hq, hd = q.shape
+    return matmul(out.reshape(b, 1, hq * hd), params["wo"]), (k_cache, v_cache)

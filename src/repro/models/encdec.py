@@ -1,0 +1,232 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment, the mel-spectrogram + conv frontend is a STUB: the
+encoder consumes precomputed frame embeddings [B, enc_seq, d] from
+``input_specs``.  Deviations (recorded in DESIGN.md): sinusoidal decoder
+positions instead of learned (keeps parameter shapes independent of the
+requested stand-in sequence lengths), bias-free projections.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.attention import decode_attention
+from repro.models.layers import (gated_mlp, init_tree, layer_norm, matmul,
+                                 mlp_param_shapes, sinusoidal_positions)
+from repro.models.transformer import chunked_lm_loss, lm_loss
+
+
+def _ln_shapes(d):
+    return {"scale": (d,), "bias": (d,)}
+
+
+def enc_layer_shapes(cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": _ln_shapes(d),
+        "attn": attn_mod.attn_param_shapes(cfg),
+        "ln2": _ln_shapes(d),
+        "mlp": mlp_param_shapes(d, cfg.d_ff, "gelu_plain"),
+    }
+
+
+def dec_layer_shapes(cfg) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": _ln_shapes(d),
+        "self_attn": attn_mod.attn_param_shapes(cfg),
+        "ln2": _ln_shapes(d),
+        "cross_attn": attn_mod.attn_param_shapes(cfg),
+        "ln3": _ln_shapes(d),
+        "mlp": mlp_param_shapes(d, cfg.d_ff, "gelu_plain"),
+    }
+
+
+def param_shapes(cfg) -> dict:
+    stack = lambda n, s: jax.tree_util.tree_map(
+        lambda t: (n, *t), s, is_leaf=lambda t: isinstance(t, tuple))
+    d = cfg.d_model
+    return {
+        "embed": (cfg.vocab_size, d),
+        "enc_layers": stack(cfg.enc_layers, enc_layer_shapes(cfg)),
+        "enc_final_ln": _ln_shapes(d),
+        "dec_layers": stack(cfg.num_layers, dec_layer_shapes(cfg)),
+        "dec_final_ln": _ln_shapes(d),
+    }
+
+
+def init_params(cfg, key):
+    return init_tree(key, param_shapes(cfg), jnp.dtype(cfg.dtype))
+
+
+def _ln(x, p, eps):
+    return layer_norm(x, p["scale"], p["bias"], eps)
+
+
+def _mha(params, x, cfg, *, kv=None, causal, impl):
+    """Self (kv=None) or cross attention, no rope (whisper)."""
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    src = x if kv is None else kv
+    q = matmul(x, params["wq"]).reshape(b, s, h, hd)
+    k = matmul(src, params["wk"]).reshape(b, src.shape[1], h, hd)
+    v = matmul(src, params["wv"]).reshape(b, src.shape[1], h, hd)
+    if impl == "naive":
+        out = attn_mod.naive_attention(q, k, v, causal=causal)
+    else:
+        out = attn_mod.chunked_attention(q, k, v, causal=causal)
+    return matmul(out.reshape(b, s, h * hd), params["wo"]), (k, v)
+
+
+def encode(params, frames, cfg, *, impl="chunked", remat=False):
+    """frames [B,enc_seq,d] (stubbed conv-frontend output) -> [B,enc_seq,d]."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    pos = sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = x + pos[None]
+
+    def layer(h, lp):
+        a, _ = _mha(lp["attn"], _ln(h, lp["ln1"], cfg.norm_eps), cfg,
+                    causal=False, impl=impl)
+        h = h + a
+        h = h + gated_mlp(_ln(h, lp["ln2"], cfg.norm_eps), lp["mlp"],
+                          "gelu_plain")
+        return h, None
+
+    body = jax.checkpoint(layer) if remat else layer
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return _ln(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+def _dec_embed(params, tokens, cfg, start_pos=0):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    pos = sinusoidal_positions(start_pos + tokens.shape[1],
+                               cfg.d_model).astype(x.dtype)
+    return x + pos[None, start_pos:]
+
+
+def decode_full(params, tokens, enc_out, cfg, *, impl="chunked",
+                remat=False, return_hidden=False, collect_cache=True):
+    """Teacher-forced decoder pass. Returns (logits|hidden, kvs)."""
+    x = _dec_embed(params, tokens, cfg)
+
+    def layer(h, lp):
+        a, skv = _mha(lp["self_attn"], _ln(h, lp["ln1"], cfg.norm_eps), cfg,
+                      causal=True, impl=impl)
+        h = h + a
+        c, ckv = _mha(lp["cross_attn"], _ln(h, lp["ln2"], cfg.norm_eps), cfg,
+                      kv=enc_out, causal=False, impl=impl)
+        h = h + c
+        h = h + gated_mlp(_ln(h, lp["ln3"], cfg.norm_eps), lp["mlp"],
+                          "gelu_plain")
+        return h, ((skv, ckv) if collect_cache else None)
+
+    body = jax.checkpoint(layer) if remat else layer
+    x, kvs = jax.lax.scan(body, x, params["dec_layers"])
+    x = _ln(x, params["dec_final_ln"], cfg.norm_eps)
+    if return_hidden:
+        return x, kvs
+    return matmul(x, params["embed"].T), kvs
+
+
+def train_loss(params, batch, cfg, *, impl="chunked"):
+    """batch: frames [B,enc_seq,d], tokens [B,S+1]."""
+    enc_out = encode(params, batch["frames"], cfg, impl=impl, remat=True)
+    tokens = batch["tokens"]
+    if cfg.loss_chunk:
+        x, _ = decode_full(params, tokens[:, :-1], enc_out, cfg, impl=impl,
+                           remat=True, return_hidden=True,
+                           collect_cache=False)
+        loss = chunked_lm_loss(x, params["embed"].T, tokens[:, 1:], cfg)
+    else:
+        logits, _ = decode_full(params, tokens[:, :-1], enc_out, cfg,
+                                impl=impl, remat=True, collect_cache=False)
+        loss = lm_loss(logits, tokens[:, 1:], batch.get("mask"))
+    return loss, {"xent": loss, "aux": jnp.zeros(())}
+
+
+# --------------------------------------------------------------------------
+# Cache / decode
+# --------------------------------------------------------------------------
+def cache_shapes(cfg, batch_size: int, max_len: int) -> dict:
+    l, dtype = cfg.num_layers, jnp.dtype(cfg.dtype)
+    h, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "self_k": ((l, batch_size, max_len, h, hd), dtype),
+        "self_v": ((l, batch_size, max_len, h, hd), dtype),
+        "cross_k": ((l, batch_size, cfg.enc_seq, h, hd), dtype),
+        "cross_v": ((l, batch_size, cfg.enc_seq, h, hd), dtype),
+        "pos": ((), jnp.int32),
+    }
+
+
+def init_cache(cfg, batch_size: int, max_len: int) -> dict:
+    return jax.tree_util.tree_map(
+        lambda sd: jnp.zeros(sd[0], sd[1]),
+        cache_shapes(cfg, batch_size, max_len),
+        is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple))
+
+
+def prefill(params, batch, cfg, max_len: int, *, impl="chunked"):
+    """batch: frames + tokens (prompt). Builds self+cross caches."""
+    enc_out = encode(params, batch["frames"], cfg, impl=impl)
+    tokens = batch["tokens"]
+    logits, (skv, ckv) = decode_full(params, tokens, enc_out, cfg, impl=impl)
+    cache = init_cache(cfg, tokens.shape[0], max_len)
+    sk, sv = skv
+    cache["self_k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["self_k"], sk.astype(cache["self_k"].dtype), 0, axis=2)
+    cache["self_v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["self_v"], sv.astype(cache["self_v"].dtype), 0, axis=2)
+    cache["cross_k"], cache["cross_v"] = (
+        ckv[0].astype(cache["cross_k"].dtype),
+        ckv[1].astype(cache["cross_v"].dtype))
+    cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    return logits[:, -1:], cache
+
+
+def decode_step(params, batch, cache, cfg):
+    """One token. batch: {"token": [B,1]}."""
+    pos = cache["pos"]
+    x = _dec_embed_at(params, batch["token"], cfg, pos)
+    h_heads, hd = cfg.num_heads, cfg.head_dim
+    enc_valid = jnp.asarray(cfg.enc_seq - 1, jnp.int32)
+
+    def layer(h, inp):
+        lp, sk, sv, ck, cv = inp
+        b = h.shape[0]
+        xn = _ln(h, lp["ln1"], cfg.norm_eps)
+        q = matmul(xn, lp["self_attn"]["wq"]).reshape(b, 1, h_heads, hd)
+        k = matmul(xn, lp["self_attn"]["wk"]).reshape(b, 1, h_heads, hd)
+        v = matmul(xn, lp["self_attn"]["wv"]).reshape(b, 1, h_heads, hd)
+        sk = jax.lax.dynamic_update_slice_in_dim(sk, k, pos, axis=1)
+        sv = jax.lax.dynamic_update_slice_in_dim(sv, v, pos, axis=1)
+        a = decode_attention(q, sk, sv, pos)
+        h = h + matmul(a.reshape(b, 1, h_heads * hd), lp["self_attn"]["wo"])
+        xn = _ln(h, lp["ln2"], cfg.norm_eps)
+        q = matmul(xn, lp["cross_attn"]["wq"]).reshape(b, 1, h_heads, hd)
+        c = decode_attention(q, ck, cv, enc_valid)
+        h = h + matmul(c.reshape(b, 1, h_heads * hd), lp["cross_attn"]["wo"])
+        h = h + gated_mlp(_ln(h, lp["ln3"], cfg.norm_eps), lp["mlp"],
+                          "gelu_plain")
+        return h, (sk, sv)
+
+    x, (sk, sv) = jax.lax.scan(
+        layer, x, (params["dec_layers"], cache["self_k"], cache["self_v"],
+                   cache["cross_k"], cache["cross_v"]))
+    x = _ln(x, params["dec_final_ln"], cfg.norm_eps)
+    logits = matmul(x, params["embed"].T)
+    new_cache = dict(cache)
+    new_cache.update({"self_k": sk, "self_v": sv, "pos": pos + 1})
+    return logits, new_cache
+
+
+def _dec_embed_at(params, token, cfg, pos):
+    x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
+    d = cfg.d_model
+    half = d // 2
+    dim = jnp.arange(half, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / (10000.0 ** (2 * dim / d))
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(x.dtype)
+    return x + pe[None, None, :]

@@ -1,0 +1,226 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+(arXiv:2411.15242).
+
+The shared attention block (single weight set) is applied before every
+``cfg.shared_attn_every``-th Mamba2 layer.  Layers are organised as
+G groups × K layers (K = shared_attn_every) and executed as a nested scan:
+
+    for g in range(G):            # outer scan (shared attn + group params)
+        x += shared_attn(ln(x))   # its own KV cache per application
+        for k in range(K):        # inner scan (stacked mamba params)
+            x += valid[g,k] * mamba2(ln(x))
+
+When L % K != 0 the trailing group is padded with identity (valid=0) layers;
+the padding overhead is reported by ``pad_fraction``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as m2
+from repro.models.layers import init_tree, matmul, rms_norm
+from repro.models.transformer import _lm_head, chunked_lm_loss, lm_loss
+
+
+def _grouping(cfg) -> tuple[int, int]:
+    k = cfg.shared_attn_every
+    g = -(-cfg.num_layers // k)
+    return g, k
+
+
+def pad_fraction(cfg) -> float:
+    g, k = _grouping(cfg)
+    return (g * k - cfg.num_layers) / (g * k)
+
+
+def valid_mask(cfg) -> jnp.ndarray:
+    g, k = _grouping(cfg)
+    idx = jnp.arange(g * k).reshape(g, k)
+    return (idx < cfg.num_layers).astype(jnp.float32)
+
+
+def param_shapes(cfg) -> dict:
+    g, k = _grouping(cfg)
+    d = cfg.d_model
+    mamba = jax.tree_util.tree_map(
+        lambda s: (g, k, *s), m2.mamba2_param_shapes(cfg),
+        is_leaf=lambda s: isinstance(s, tuple))
+    mamba["pre_norm_scale"] = (g, k, d)
+    from repro.models.layers import mlp_param_shapes
+    return {
+        "embed": (cfg.vocab_size, d),
+        "final_norm_scale": (d,),
+        "mamba": mamba,
+        # shared *transformer* block (attn + MLP), one weight set reused
+        "shared_attn": {
+            "ln_scale": (d,),
+            "attn": attn_mod.attn_param_shapes(cfg),
+            "ln2_scale": (d,),
+            "mlp": mlp_param_shapes(d, cfg.d_ff, cfg.mlp_act),
+        },
+    }
+
+
+def init_params(cfg, key):
+    return init_tree(key, param_shapes(cfg), jnp.dtype(cfg.dtype))
+
+
+def _embed(params, tokens, cfg):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    return x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+
+
+def forward(params, batch, cfg, *, impl="chunked", remat=False,
+            collect_cache=False):
+    """Full segment. Returns (hidden|logits, aux, cache_parts).
+
+    ``collect_cache=False`` (training) emits NO per-layer ys — under remat
+    every scan-body output would otherwise be saved for the backward pass
+    (measured: tens of GiB of dead KV/SSM states on zamba2 train_4k).
+    """
+    x = _embed(params, batch["tokens"], cfg)
+    x = constrain(x, "activation")
+    positions = jnp.arange(x.shape[1])[None, :]
+    vm = valid_mask(cfg)
+    shared = params["shared_attn"]
+
+    def group(carry, inp):
+        h = carry
+        gp, vrow = inp                   # group params, valid row [K]
+        a, kv = attn_mod.gqa_self_attention(
+            shared["attn"], rms_norm(h, shared["ln_scale"], cfg.norm_eps),
+            cfg, positions=positions, impl=impl)
+        h = h + a
+        from repro.models.layers import gated_mlp
+        h = h + gated_mlp(rms_norm(h, shared["ln2_scale"], cfg.norm_eps),
+                          shared["mlp"], cfg.mlp_act)
+        h = constrain(h, "activation")
+
+        def lp_wo_norm(lp):
+            return {kk: vv for kk, vv in lp.items() if kk != "pre_norm_scale"}
+
+        def layer(hc, lin):
+            lp, v = lin
+            y, states = m2.mamba2_block(
+                lp_wo_norm(lp), rms_norm(hc, lp["pre_norm_scale"],
+                                         cfg.norm_eps), cfg)
+            hc = hc + (v.astype(jnp.float32) * y.astype(jnp.float32)
+                       ).astype(hc.dtype)
+            return constrain(hc, "activation"), states
+
+        # per-layer remat: one Mamba layer's SSD chunk residuals live at a
+        # time during the group's backward pass
+        lbody = jax.checkpoint(layer) if remat else layer
+        h, states = jax.lax.scan(lbody, h, (gp, vrow))
+        if not collect_cache:
+            return h, None
+        return h, (kv, states)
+
+    body = jax.checkpoint(group) if remat else group
+    x, ys = jax.lax.scan(body, x, (params["mamba"], vm))
+    x = rms_norm(x, params["final_norm_scale"], cfg.norm_eps)
+    if collect_cache:
+        kvs, states = ys
+        return _lm_head(params, x[:, -1:], cfg), 0.0, (kvs, states)
+    return x, 0.0, None
+
+
+def train_loss(params, batch, cfg, *, impl="chunked"):
+    tokens = batch["tokens"]
+    x, aux, _ = forward(params, {"tokens": tokens[:, :-1]}, cfg,
+                        impl=impl, remat=True)
+    if cfg.loss_chunk:
+        head_w = (params["embed"].T if cfg.tie_embeddings
+                  and "lm_head" not in params else params["lm_head"])
+        loss = chunked_lm_loss(x, head_w, tokens[:, 1:], cfg)
+    else:
+        loss = lm_loss(_lm_head(params, x, cfg), tokens[:, 1:],
+                       batch.get("mask"))
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# Cache / decode
+# --------------------------------------------------------------------------
+def cache_shapes(cfg, batch_size: int, max_len: int) -> dict:
+    g, k = _grouping(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    h, p, n = cfg.n_ssm_heads, cfg.d_inner // cfg.n_ssm_heads, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * n
+    kv = (g, batch_size, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "attn_k": (kv, dtype),
+        "attn_v": (kv, dtype),
+        "ssm": ((g, k, batch_size, h, p, n), jnp.float32),
+        "conv": ((g, k, batch_size, cfg.ssm_conv - 1, conv_dim), dtype),
+        "pos": ((), jnp.int32),
+    }
+
+
+def init_cache(cfg, batch_size: int, max_len: int) -> dict:
+    return jax.tree_util.tree_map(
+        lambda sd: jnp.zeros(sd[0], sd[1]), cache_shapes(cfg, batch_size,
+                                                         max_len),
+        is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple))
+
+
+def prefill(params, batch, cfg, max_len: int, *, impl="chunked"):
+    s = batch["tokens"].shape[1]
+    logits, _, (kvs, states) = forward(params, batch, cfg, impl=impl,
+                                       collect_cache=True)
+    ssm_state, conv_tail = states
+    cache = init_cache(cfg, batch["tokens"].shape[0], max_len)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    k, v = kvs
+    cache["attn_k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["attn_k"], k.astype(cache["attn_k"].dtype), 0, axis=2)
+    cache["attn_v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["attn_v"], v.astype(cache["attn_v"].dtype), 0, axis=2)
+    cache["ssm"] = ssm_state.astype(jnp.float32)
+    cache["conv"] = conv_tail.astype(cache["conv"].dtype)
+    return logits, cache
+
+
+def decode_step(params, batch, cache, cfg):
+    x = _embed(params, batch["token"], cfg)
+    pos = cache["pos"]
+    vm = valid_mask(cfg)
+    shared = params["shared_attn"]
+
+    def group(h, inp):
+        gp, vrow, kc, vc, ssm_g, conv_g = inp
+        xn = rms_norm(h, shared["ln_scale"], cfg.norm_eps)
+        a, (kc2, vc2) = attn_mod.gqa_decode_attention(
+            shared["attn"], xn, cfg, k_cache=kc, v_cache=vc, pos=pos)
+        h = h + a
+        from repro.models.layers import gated_mlp
+        h = h + gated_mlp(rms_norm(h, shared["ln2_scale"], cfg.norm_eps),
+                          shared["mlp"], cfg.mlp_act)
+
+        def layer(hc, lin):
+            lp, v, ssm_l, conv_l = lin
+            lpm = {kk: vv for kk, vv in lp.items() if kk != "pre_norm_scale"}
+            y, (ssm2, conv2) = m2.mamba2_step(
+                lpm, rms_norm(hc, lp["pre_norm_scale"], cfg.norm_eps), cfg,
+                ssm_state=ssm_l, conv_state=conv_l)
+            # identity for padded layers: keep old state, no residual
+            hc = hc + (v.astype(jnp.float32) * y.astype(jnp.float32)
+                       ).astype(hc.dtype)
+            ssm2 = jnp.where(v > 0, ssm2, ssm_l)
+            conv2 = jnp.where(v > 0, conv2, conv_l)
+            return hc, (ssm2, conv2)
+
+        h, (ssm_g2, conv_g2) = jax.lax.scan(layer, h,
+                                            (gp, vrow, ssm_g, conv_g))
+        return h, (kc2, vc2, ssm_g2, conv_g2)
+
+    x, (kc, vc, ssm, conv) = jax.lax.scan(
+        group, x, (params["mamba"], vm, cache["attn_k"], cache["attn_v"],
+                   cache["ssm"], cache["conv"]))
+    x = rms_norm(x, params["final_norm_scale"], cfg.norm_eps)
+    logits = _lm_head(params, x, cfg)
+    return logits, {"attn_k": kc, "attn_v": vc, "ssm": ssm, "conv": conv,
+                    "pos": pos + 1}

@@ -1,0 +1,198 @@
+"""Mamba2 / SSD block (arXiv:2405.21060 form), used by zamba2.
+
+State-space recurrence per head h with scalar decay:
+
+    H_t = a_t * H_{t-1} + dt_t * x_t ⊗ B_t          H ∈ [P, N]
+    y_t = H_t · C_t + D * x_t
+
+computed in the TPU-friendly *chunked* (block-decomposition) form: intra-chunk
+work is dense matmuls over [Q, Q] tiles, inter-chunk work is a short scan over
+chunk states — matching how the SSD kernel tiles onto the MXU (the Pallas twin
+lives in ``repro.kernels.ssm_scan``).
+
+TPU-sharding adaptation (DESIGN.md §2): the reference CUDA implementation
+fuses z/x/B/C/dt into one in-projection and one grouped conv.  Because the
+conv is depthwise (per-channel), splitting it into separate x/B/C streams is
+*exactly* equivalent — and it makes the x-stream head-aligned so the SSD
+heads shard cleanly over the ``model`` mesh axis.
+
+Shapes: x [B,S,H,P]; dt [B,S,H]; B,C [B,S,N] (single group, shared across
+heads); A_log [H]; D [H].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import matmul, rms_norm
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int):
+    """Chunked SSD scan. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // q
+
+    # per-step log decay: log a_t = -exp(A_log) * dt_t   [B,S,H]
+    log_a = (-jnp.exp(a_log.astype(jnp.float32))[None, None, :]
+             * dt.astype(jnp.float32))
+    xb = (x.astype(jnp.float32)
+          * dt.astype(jnp.float32)[..., None])              # dt-weighted input
+
+    # reshape to chunks: [B,nc,Q,...] -> scan over nc
+    def cshape(t):
+        return t.reshape(bsz, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, lc, bc, cc = map(cshape, (xb, log_a, b.astype(jnp.float32),
+                                  c.astype(jnp.float32)))
+
+    def chunk_step(state, inp):
+        xq, lq, bq, cq = inp          # [B,Q,H,P], [B,Q,H], [B,Q,N], [B,Q,N]
+        csum = jnp.cumsum(lq, axis=1)                       # [B,Q,H] inclusive
+        total = csum[:, -1]                                 # [B,H]
+        # --- inter-chunk: contribution of the carried state -------------
+        #   y_inter[t] = exp(csum[t]) * C_t · H_prev
+        decay_in = jnp.exp(csum)                            # [B,Q,H]
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", cq, state) * decay_in[..., None]
+        # --- intra-chunk: dense causal tile ------------------------------
+        #   L[t,s] = exp(csum[t] - csum[s]) for s <= t  (decay s→t, excl. s)
+        rel = csum[:, :, None, :] - csum[:, None, :, :]     # [B,Q,Q,H]
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        gate = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+        scores = jnp.einsum("bqn,bsn->bqs", cq, bq)         # [B,Q,Q]
+        y_intra = jnp.einsum("bqs,bqsh,bshp->bqhp",
+                             scores, gate, xq)
+        # --- state update -------------------------------------------------
+        #   H_new = exp(total) * H_prev + sum_s exp(total - csum[s]) B_s x_s^T
+        decay_out = jnp.exp(total[:, None] - csum)          # [B,Q,H]
+        new_state = (state * jnp.exp(total)[..., None, None]
+                     + jnp.einsum("bsh,bsn,bshp->bhpn", decay_out, bq, xq))
+        return new_state, y_inter + y_intra
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final_state, yc = jax.lax.scan(chunk_step, init, (xc, lc, bc, cc))
+    y = yc.swapaxes(0, 1).reshape(bsz, nc * q, h, p)[:, :s]
+    # D skip connection uses the *raw* (un-dt-weighted) input
+    y = y + (d_skip.astype(jnp.float32)[None, None, :, None]
+             * x.astype(jnp.float32)[:, :s])
+    return y, final_state
+
+
+def ssd_step(state, x_t, dt_t, a_log, b_t, c_t, d_skip):
+    """Single-token SSD recurrence.
+
+    state [B,H,P,N]; x_t [B,H,P]; dt_t [B,H]; b_t/c_t [B,N].
+    Returns (y_t [B,H,P], new_state).
+    """
+    log_a = -jnp.exp(a_log.astype(jnp.float32))[None, :] * dt_t.astype(jnp.float32)
+    a = jnp.exp(log_a)                                       # [B,H]
+    xb = x_t.astype(jnp.float32) * dt_t.astype(jnp.float32)[..., None]
+    outer = jnp.einsum("bhp,bn->bhpn", xb, b_t.astype(jnp.float32))
+    new_state = state * a[..., None, None] + outer
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c_t.astype(jnp.float32))
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * x_t.astype(jnp.float32)
+    return y, new_state
+
+
+# --------------------------------------------------------------------------
+# Full Mamba2 block: projections + causal depthwise convs + SSD + gated norm
+# --------------------------------------------------------------------------
+def mamba2_param_shapes(cfg) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    return {
+        "w_z": (d, di),
+        "w_x": (d, di),
+        "w_b": (d, n),
+        "w_c": (d, n),
+        "w_dt": (d, h),
+        "conv_x_w": (cfg.ssm_conv, di),
+        "conv_x_b": (di,),
+        "conv_b_w": (cfg.ssm_conv, n),
+        "conv_b_b": (n,),
+        "conv_c_w": (cfg.ssm_conv, n),
+        "conv_c_b": (n,),
+        "a_log": (h,),
+        "d_skip": (h,),
+        "dt_bias": (h,),
+        "norm_scale": (di,),
+        "w_out": (di, d),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv + silu over the sequence axis. x [B,S,C]."""
+    w32 = w.astype(jnp.float32)
+    width = w32.shape[0]
+    x32 = x.astype(jnp.float32)
+    padded = jnp.pad(x32, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(padded[:, i:i + x32.shape[1]] * w32[i] for i in range(width))
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _conv_step(window, w, b):
+    """window [B,W,C] (already includes the new token last)."""
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return jax.nn.silu(out + b.astype(jnp.float32))
+
+
+def mamba2_block(params, x, cfg):
+    """Full-segment Mamba2. x [B,S,d] → (y [B,S,d], (ssm_state, conv_tail))."""
+    bsz, s, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    p = di // h
+    z = matmul(x, params["w_z"])
+    x_pre = matmul(x, params["w_x"])
+    b_pre = matmul(x, params["w_b"])
+    c_pre = matmul(x, params["w_c"])
+    dt_raw = matmul(x, params["w_dt"])
+    conv_tail = jnp.concatenate(
+        [x_pre[:, -(cfg.ssm_conv - 1):], b_pre[:, -(cfg.ssm_conv - 1):],
+         c_pre[:, -(cfg.ssm_conv - 1):]], axis=-1)
+    xs = _causal_conv(x_pre, params["conv_x_w"], params["conv_x_b"])
+    b = _causal_conv(b_pre, params["conv_b_w"], params["conv_b_b"])
+    c = _causal_conv(c_pre, params["conv_c_w"], params["conv_c_b"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    y, ssm_state = ssd_chunked(xs.reshape(bsz, s, h, p), dt,
+                               params["a_log"], b, c, params["d_skip"],
+                               cfg.ssm_chunk)
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm_scale"], cfg.norm_eps)
+    return matmul(y, params["w_out"]), (ssm_state.astype(jnp.float32),
+                                        conv_tail)
+
+
+def mamba2_step(params, x, cfg, *, ssm_state, conv_state):
+    """Single-token Mamba2. x [B,1,d]; conv_state [B,W-1,di+2n]."""
+    bsz = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    p = di // h
+    z = matmul(x, params["w_z"])
+    x_pre = matmul(x, params["w_x"])
+    b_pre = matmul(x, params["w_b"])
+    c_pre = matmul(x, params["w_c"])
+    dt_raw = matmul(x, params["w_dt"])
+    new_col = jnp.concatenate([x_pre, b_pre, c_pre], axis=-1)  # [B,1,di+2n]
+    window = jnp.concatenate([conv_state, new_col], axis=1)    # [B,W,*]
+    new_conv_state = window[:, 1:]
+    xw, bw, cw = window[..., :di], window[..., di:di + n], window[..., di + n:]
+    xs = _conv_step(xw, params["conv_x_w"], params["conv_x_b"]).astype(x.dtype)
+    b = _conv_step(bw, params["conv_b_w"], params["conv_b_b"]).astype(x.dtype)
+    c = _conv_step(cw, params["conv_c_w"], params["conv_c_b"]).astype(x.dtype)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    y, new_ssm = ssd_step(ssm_state, xs.reshape(bsz, h, p), dt,
+                          params["a_log"], b, c, params["d_skip"])
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm_scale"], cfg.norm_eps)
+    return matmul(y, params["w_out"]), (new_ssm, new_conv_state)

@@ -1,0 +1,352 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+mLSTM is implemented in a *chunkwise-parallel* form (the TPU adaptation —
+dense [Q,Q] tiles on the MXU + a short inter-chunk scan), with the exact
+sequential recurrence kept as the test oracle (``mlstm_sequential``).
+Stabilisation follows the paper: running per-head max ``m`` with the
+denominator ``max(|q·n|, exp(-m))``.
+
+sLSTM is an inherently sequential per-unit recurrence (block-diagonal
+recurrent weights per head) — implemented with ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import matmul, rms_norm
+
+NEG = -1e30
+
+
+# --------------------------------------------------------------------------
+# mLSTM cell
+# --------------------------------------------------------------------------
+def mlstm_sequential(q, k, v, i_raw, f_raw):
+    """Oracle: step-by-step recurrence. q/k/v [B,S,H,D]; gates [B,S,H].
+
+    Returns (h [B,S,H,D], (C [B,H,D,D], n [B,H,D], m [B,H])).
+    """
+    bsz, s, h, d = q.shape
+    k = k.astype(jnp.float32) / jnp.sqrt(d)
+    q, v = q.astype(jnp.float32), v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    i_raw = i_raw.astype(jnp.float32)
+
+    def step(state, inp):
+        c, n, m = state
+        qt, kt, vt, it, lft = inp
+        m_new = jnp.maximum(lft + m, it)                     # [B,H]
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(lft + m - m_new)
+        c = c * fp[..., None, None] + ip[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])             # [B,H,D,D]
+        n = n * fp[..., None] + ip[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, c)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (c, n, m_new), num / den
+
+    init = (jnp.zeros((bsz, h, d, d), jnp.float32),
+            jnp.zeros((bsz, h, d), jnp.float32),
+            jnp.zeros((bsz, h), jnp.float32))
+    xs = tuple(t.swapaxes(0, 1) for t in (q, k, v, i_raw, logf))
+    state, hs = jax.lax.scan(step, init, xs)
+    return hs.swapaxes(0, 1), state
+
+
+def mlstm_chunked(q, k, v, i_raw, f_raw, chunk: int = 128):
+    """Chunkwise-parallel mLSTM, numerically equal to ``mlstm_sequential``."""
+    bsz, s, h, d = q.shape
+    qc = min(chunk, s)
+    pad = (-s) % qc
+    if pad:
+        zp4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        zp3 = ((0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(t, zp4) for t in (q, k, v))
+        i_raw = jnp.pad(i_raw, zp3)
+        f_raw = jnp.pad(f_raw, zp3, constant_values=30.0)  # f≈1, i: pad i_raw
+        i_raw = jnp.where(
+            jnp.arange(s + pad)[None, :, None] < s, i_raw, NEG)
+    nc = (s + pad) // qc
+    k = k.astype(jnp.float32) / jnp.sqrt(d)
+    q, v = q.astype(jnp.float32), v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    i_raw = i_raw.astype(jnp.float32)
+
+    def cshape(t):
+        return t.reshape(bsz, nc, qc, *t.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, is_, lfs = map(cshape, (q, k, v, i_raw, logf))
+
+    causal = jnp.tril(jnp.ones((qc, qc), bool))
+
+    def chunk_step(state, inp):
+        c_st, n_st, m_st = inp_state = state
+        qq, kk, vv, ii, lf = inp                 # [B,Q,H,*]
+        b = jnp.cumsum(lf, axis=1)               # [B,Q,H] inclusive
+        btot = b[:, -1]                          # [B,H]
+        # log-weights
+        dmat = (b[:, :, None, :] - b[:, None, :, :]
+                + ii[:, None, :, :])             # [B,t,s,H]
+        dmat = jnp.where(causal[None, :, :, None], dmat, NEG)
+        m_intra = dmat.max(axis=2)               # [B,Q,H]
+        m_t = jnp.maximum(b + m_st[:, None, :], m_intra)
+        # intra scores
+        sc = jnp.einsum("bqhd,bshd->bqsh", qq, kk)
+        w = jnp.exp(dmat - m_t[:, :, None, :])
+        num = jnp.einsum("bqsh,bqsh,bshe->bqhe", sc, w, vv)
+        den = jnp.einsum("bqsh,bqsh->bqh", sc, w)
+        # inter (carried state)
+        scale_in = jnp.exp(b + m_st[:, None, :] - m_t)       # [B,Q,H]
+        num = num + scale_in[..., None] * jnp.einsum(
+            "bqhd,bhde->bqhe", qq, c_st)
+        den = den + scale_in * jnp.einsum("bqhd,bhd->bqh", qq, n_st)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        out = num / den
+        # state update
+        m_new = jnp.maximum(btot + m_st,
+                            (btot[:, None] - b + ii).max(axis=1))
+        sc_out = jnp.exp(btot[:, None] - b + ii - m_new[:, None])  # [B,Q,H]
+        c_new = (c_st * jnp.exp(btot + m_st - m_new)[..., None, None]
+                 + jnp.einsum("bqh,bqhd,bqhe->bhde", sc_out, kk, vv))
+        n_new = (n_st * jnp.exp(btot + m_st - m_new)[..., None]
+                 + jnp.einsum("bqh,bqhd->bhd", sc_out, kk))
+        return (c_new, n_new, m_new), out
+
+    init = (jnp.zeros((bsz, h, d, d), jnp.float32),
+            jnp.zeros((bsz, h, d), jnp.float32),
+            jnp.zeros((bsz, h), jnp.float32))
+    state, hs = jax.lax.scan(chunk_step, init, (qs, ks, vs, is_, lfs))
+    out = hs.swapaxes(0, 1).reshape(bsz, nc * qc, h, d)[:, :s]
+    return out, state
+
+
+def mlstm_step(state, q_t, k_t, v_t, i_t, f_t):
+    """Single-token mLSTM. state = (C,n,m); q/k/v [B,H,D]; gates [B,H]."""
+    c, n, m = state
+    d = q_t.shape[-1]
+    kt = k_t.astype(jnp.float32) / jnp.sqrt(d)
+    qt, vt = q_t.astype(jnp.float32), v_t.astype(jnp.float32)
+    lft = jax.nn.log_sigmoid(f_t.astype(jnp.float32))
+    it = i_t.astype(jnp.float32)
+    m_new = jnp.maximum(lft + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(lft + m - m_new)
+    c = c * fp[..., None, None] + ip[..., None, None] * (
+        kt[..., :, None] * vt[..., None, :])
+    n = n * fp[..., None] + ip[..., None] * kt
+    num = jnp.einsum("bhd,bhde->bhe", qt, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                      jnp.exp(-m_new))[..., None]
+    return (c, n, m_new), num / den
+
+
+# --------------------------------------------------------------------------
+# sLSTM cell (scalar memory, block-diagonal recurrence)
+# --------------------------------------------------------------------------
+def _block_diag_matmul(h, r):
+    """h [B,d] × blockdiag r [H,D',D'] -> [B,d]."""
+    bsz, d = h.shape
+    nh, du, _ = r.shape
+    return jnp.einsum("bhu,huv->bhv", h.reshape(bsz, nh, du),
+                      r).reshape(bsz, d)
+
+
+def slstm_scan(x, params, n_heads: int):
+    """x [B,S,d] (pre-activations input); returns (h [B,S,d], final state).
+
+    state = (c, n, hprev, m) each [B,d].
+    """
+    bsz, s, d = x.shape
+
+    wz, wi, wf, wo = (params[k] for k in ("w_z", "w_i", "w_f", "w_o"))
+    rz, ri, rf, ro = (params[k] for k in ("r_z", "r_i", "r_f", "r_o"))
+    bz, bi, bf, bo = (params[k] for k in ("b_z", "b_i", "b_f", "b_o"))
+
+    x32 = x.astype(jnp.float32)
+    # input contributions precomputed for the whole sequence
+    pre = {
+        "z": jnp.einsum("bsd,de->bse", x32, wz.astype(jnp.float32)) + bz,
+        "i": jnp.einsum("bsd,de->bse", x32, wi.astype(jnp.float32)) + bi,
+        "f": jnp.einsum("bsd,de->bse", x32, wf.astype(jnp.float32)) + bf,
+        "o": jnp.einsum("bsd,de->bse", x32, wo.astype(jnp.float32)) + bo,
+    }
+
+    def step(state, inp):
+        c, n, hp, m = state
+        pz, pi, pf, po = inp
+        z = jnp.tanh(pz + _block_diag_matmul(hp, rz))
+        it = pi + _block_diag_matmul(hp, ri)
+        ft = pf + _block_diag_matmul(hp, rf)
+        o = jax.nn.sigmoid(po + _block_diag_matmul(hp, ro))
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(lf + m - m_new)
+        c = fp * c + ip * z
+        n = fp * n + ip
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    zeros = jnp.zeros((bsz, d), jnp.float32)
+    init = (zeros, zeros, zeros, zeros)
+    xs = tuple(t.swapaxes(0, 1) for t in (pre["z"], pre["i"], pre["f"],
+                                          pre["o"]))
+    state, hs = jax.lax.scan(step, init, xs)
+    return hs.swapaxes(0, 1).astype(x.dtype), state
+
+
+def slstm_step(state, x_t, params):
+    """Single-token sLSTM. x_t [B,d]."""
+    c, n, hp, m = state
+    x32 = x_t.astype(jnp.float32)
+
+    def gate(w, r, b):
+        return (x32 @ w.astype(jnp.float32) + b
+                + _block_diag_matmul(hp, r))
+
+    z = jnp.tanh(gate(params["w_z"], params["r_z"], params["b_z"]))
+    it = gate(params["w_i"], params["r_i"], params["b_i"])
+    ft = gate(params["w_f"], params["r_f"], params["b_f"])
+    o = jax.nn.sigmoid(gate(params["w_o"], params["r_o"], params["b_o"]))
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(lf + m - m_new)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, h, m_new), h.astype(x_t.dtype)
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+def mlstm_block_shapes(cfg) -> dict:
+    d = cfg.d_model
+    di = int(cfg.xlstm_proj_factor * d)
+    h = cfg.num_heads
+    return {
+        "norm_scale": (d,),
+        "w_up": (d, 2 * di),
+        "conv_w": (4, di),
+        "conv_b": (di,),
+        "w_q": (di, di),
+        "w_k": (di, di),
+        "w_v": (di, di),
+        "w_ig": (di, h),
+        "b_ig": (h,),
+        "w_fg": (di, h),
+        "b_fg": (h,),
+        "out_norm_scale": (di,),
+        "w_down": (di, d),
+    }
+
+
+def slstm_block_shapes(cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    du = d // h
+    shapes = {"norm_scale": (d,), "conv_w": (4, d), "conv_b": (d,),
+              "out_norm_scale": (d,), "w_down": (d, d)}
+    for g in ("z", "i", "f", "o"):
+        shapes[f"w_{g}"] = (d, d)
+        shapes[f"r_{g}"] = (h, du, du)
+        shapes[f"b_{g}"] = (d,)
+    return shapes
+
+
+def _conv_causal(x, w, b):
+    """Depthwise causal conv, x [B,S,C], w [W,C]."""
+    w32 = w.astype(jnp.float32)
+    width = w32.shape[0]
+    x32 = x.astype(jnp.float32)
+    padded = jnp.pad(x32, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(padded[:, i:i + x32.shape[1]] * w32[i] for i in range(width))
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlstm_block(params, x, cfg, chunk: int = 128):
+    """Full-segment mLSTM block. x [B,S,d] → (y, (C,n,m), conv_tail)."""
+    from repro.distributed.context import constrain
+    bsz, s, d = x.shape
+    h = cfg.num_heads
+    xn = rms_norm(x, params["norm_scale"], cfg.norm_eps)
+    u = matmul(xn, params["w_up"])
+    if cfg.xlstm_pin_inner:
+        # §Perf B3: without this GSPMD splits the up-projection over the
+        # model axis and must all-gather [B,S,di] before the head reshape
+        # (4 heads cannot hold a 16-way shard) — pin it replicated instead
+        u = constrain(u, "activation")
+    di = u.shape[-1] // 2
+    x_in, gate = u[..., :di], u[..., di:]
+    conv_tail = x_in[:, -3:]
+    xc = _conv_causal(x_in, params["conv_w"], params["conv_b"])
+    if cfg.xlstm_pin_inner:
+        xc = constrain(xc, "activation")
+    q = matmul(xc, params["w_q"]).reshape(bsz, s, h, di // h)
+    k = matmul(xc, params["w_k"]).reshape(bsz, s, h, di // h)
+    v = matmul(x_in, params["w_v"]).reshape(bsz, s, h, di // h)
+    i_raw = (xc.astype(jnp.float32) @ params["w_ig"].astype(jnp.float32)
+             + params["b_ig"])
+    f_raw = (xc.astype(jnp.float32) @ params["w_fg"].astype(jnp.float32)
+             + params["b_fg"])
+    out, state = mlstm_chunked(q, k, v, i_raw, f_raw, chunk)
+    out = rms_norm(out.astype(x.dtype),
+                   params["out_norm_scale"].reshape(h, di // h),
+                   cfg.norm_eps).reshape(bsz, s, di)
+    out = out * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    return x + matmul(out, params["w_down"]), state, conv_tail
+
+
+def mlstm_block_step(params, x, cfg, *, state, conv_state):
+    """Single-token mLSTM block. x [B,1,d]; conv_state [B,3,di]."""
+    bsz, _, d = x.shape
+    h = cfg.num_heads
+    xn = rms_norm(x, params["norm_scale"], cfg.norm_eps)
+    u = matmul(xn, params["w_up"])
+    di = u.shape[-1] // 2
+    x_in, gate = u[..., :di], u[..., di:]
+    window = jnp.concatenate([conv_state, x_in], axis=1)     # [B,4,di]
+    new_conv = window[:, 1:]
+    w32 = params["conv_w"].astype(jnp.float32)
+    xc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w32)
+        + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    q = matmul(xc, params["w_q"]).reshape(bsz, h, di // h)
+    k = matmul(xc, params["w_k"]).reshape(bsz, h, di // h)
+    v = matmul(x_in[:, 0], params["w_v"]).reshape(bsz, h, di // h)
+    i_raw = (xc.astype(jnp.float32) @ params["w_ig"].astype(jnp.float32)
+             + params["b_ig"])
+    f_raw = (xc.astype(jnp.float32) @ params["w_fg"].astype(jnp.float32)
+             + params["b_fg"])
+    new_state, out = mlstm_step(state, q, k, v, i_raw, f_raw)
+    out = rms_norm(out.astype(x.dtype)[:, None],
+                   params["out_norm_scale"].reshape(h, di // h),
+                   cfg.norm_eps).reshape(bsz, 1, di)
+    out = out * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    return x + matmul(out, params["w_down"]), new_state, new_conv
+
+
+def slstm_block(params, x, cfg):
+    """Full-segment sLSTM block. Returns (y, state, conv_tail)."""
+    xn = rms_norm(x, params["norm_scale"], cfg.norm_eps)
+    conv_tail = xn[:, -3:]
+    xc = _conv_causal(xn, params["conv_w"], params["conv_b"])
+    out, state = slstm_scan(xc, params, cfg.num_heads)
+    out = rms_norm(out, params["out_norm_scale"], cfg.norm_eps)
+    return x + matmul(out, params["w_down"]), state, conv_tail
+
+
+def slstm_block_step(params, x, cfg, *, state, conv_state):
+    xn = rms_norm(x, params["norm_scale"], cfg.norm_eps)     # [B,1,d]
+    window = jnp.concatenate([conv_state, xn], axis=1)
+    new_conv = window[:, 1:]
+    w32 = params["conv_w"].astype(jnp.float32)
+    xc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w32)
+        + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    new_state, out = slstm_step(state, xc, params)
+    out = rms_norm(out[:, None], params["out_norm_scale"], cfg.norm_eps)
+    return x + matmul(out, params["w_down"]), new_state, new_conv

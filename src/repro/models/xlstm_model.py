@@ -1,0 +1,195 @@
+"""xLSTM language model: groups of (slstm_every-1) mLSTM blocks + 1 sLSTM.
+
+With ``slstm_every == 0`` the stack is pure mLSTM (single scan).  No FFN
+(d_ff = 0 per the assignment) — the projection capacity lives inside the
+blocks (proj factor 2), matching the xLSTM block design.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models import xlstm as xl
+from repro.models.layers import init_tree, rms_norm
+from repro.models.transformer import _lm_head, chunked_lm_loss, lm_loss
+
+
+def _grouping(cfg) -> tuple[int, int]:
+    if not cfg.slstm_every:
+        return 1, cfg.num_layers
+    assert cfg.num_layers % cfg.slstm_every == 0, \
+        f"{cfg.name}: num_layers must divide by slstm_every"
+    return cfg.num_layers // cfg.slstm_every, cfg.slstm_every - 1
+
+
+def param_shapes(cfg) -> dict:
+    g, m = _grouping(cfg)
+    stack = lambda lead, s: jax.tree_util.tree_map(
+        lambda t: (*lead, *t), s, is_leaf=lambda t: isinstance(t, tuple))
+    shapes = {
+        "embed": (cfg.vocab_size, cfg.d_model),
+        "final_norm_scale": (cfg.d_model,),
+        "mlstm": stack((g, m), xl.mlstm_block_shapes(cfg)),
+    }
+    if cfg.slstm_every:
+        shapes["slstm"] = stack((g,), xl.slstm_block_shapes(cfg))
+    return shapes
+
+
+def init_params(cfg, key):
+    return init_tree(key, param_shapes(cfg), jnp.dtype(cfg.dtype))
+
+
+def _embed(params, tokens, cfg):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    return x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+
+
+def forward(params, batch, cfg, *, remat=False, last_only=False,
+            collect_cache=True):
+    """Returns (hidden|logits, aux=0.0, states).
+
+    ``collect_cache=False`` (training) emits no per-layer state ys — under
+    remat they would all be saved for backward."""
+    x = _embed(params, batch["tokens"], cfg)
+    x = constrain(x, "activation")
+    has_s = bool(cfg.slstm_every)
+
+    def group(h, gp):
+        def mlayer(hc, lp):
+            hc2, state, conv = xl.mlstm_block(lp, hc, cfg)
+            return (constrain(hc2, "activation"),
+                    (state, conv) if collect_cache else None)
+
+        mbody = jax.checkpoint(mlayer) if remat else mlayer
+        h, mstates = jax.lax.scan(mbody, h, gp["mlstm"])
+        sstates = None
+        if has_s:
+            sfn = (jax.checkpoint(xl.slstm_block, static_argnums=(2,))
+                   if remat else xl.slstm_block)
+            h, sstate, sconv = sfn(gp["slstm"], h, cfg)
+            h = constrain(h, "activation")
+            sstates = (sstate, sconv) if collect_cache else None
+        if not collect_cache:
+            return h, None
+        return h, (mstates, sstates)
+
+    body = jax.checkpoint(group) if remat else group
+    gp_tree = {"mlstm": params["mlstm"]}
+    if has_s:
+        gp_tree["slstm"] = params["slstm"]
+    x, states = jax.lax.scan(body, x, gp_tree)
+    x = rms_norm(x, params["final_norm_scale"], cfg.norm_eps)
+    if last_only:
+        return _lm_head(params, x[:, -1:], cfg), 0.0, states
+    return x, 0.0, states
+
+
+def train_loss(params, batch, cfg, **_):
+    tokens = batch["tokens"]
+    x, aux, _ = forward(params, {"tokens": tokens[:, :-1]}, cfg, remat=True,
+                        collect_cache=False)
+    if cfg.loss_chunk:
+        head_w = (params["embed"].T if cfg.tie_embeddings
+                  and "lm_head" not in params else params["lm_head"])
+        loss = chunked_lm_loss(x, head_w, tokens[:, 1:], cfg)
+    else:
+        loss = lm_loss(_lm_head(params, x, cfg), tokens[:, 1:],
+                       batch.get("mask"))
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# Cache / decode — xLSTM state is O(1) in sequence length.
+# --------------------------------------------------------------------------
+def cache_shapes(cfg, batch_size: int, max_len: int) -> dict:
+    del max_len                      # recurrent: no KV growth
+    g, m = _grouping(cfg)
+    d, h = cfg.d_model, cfg.num_heads
+    di = int(cfg.xlstm_proj_factor * d)
+    dh = di // h
+    b = batch_size
+    dtype = jnp.dtype(cfg.dtype)
+    shapes = {
+        "m_C": ((g, m, b, h, dh, dh), jnp.float32),
+        "m_n": ((g, m, b, h, dh), jnp.float32),
+        "m_m": ((g, m, b, h), jnp.float32),
+        "m_conv": ((g, m, b, 3, di), dtype),
+        "pos": ((), jnp.int32),
+    }
+    if cfg.slstm_every:
+        shapes.update({
+            "s_c": ((g, b, d), jnp.float32),
+            "s_n": ((g, b, d), jnp.float32),
+            "s_h": ((g, b, d), jnp.float32),
+            "s_m": ((g, b, d), jnp.float32),
+            "s_conv": ((g, b, 3, d), dtype),
+        })
+    return shapes
+
+
+def init_cache(cfg, batch_size: int, max_len: int) -> dict:
+    return jax.tree_util.tree_map(
+        lambda sd: jnp.zeros(sd[0], sd[1]),
+        cache_shapes(cfg, batch_size, max_len),
+        is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple))
+
+
+def prefill(params, batch, cfg, max_len: int, **_):
+    s = batch["tokens"].shape[1]
+    logits, _, states = forward(params, batch, cfg, last_only=True)
+    mstates, sstates = states
+    (m_C, m_n, m_m), m_conv = mstates
+    cache = init_cache(cfg, batch["tokens"].shape[0], max_len)
+    cache.update({
+        "m_C": m_C, "m_n": m_n, "m_m": m_m,
+        "m_conv": m_conv.astype(cache["m_conv"].dtype),
+        "pos": jnp.asarray(s, jnp.int32),
+    })
+    if cfg.slstm_every:
+        (s_c, s_n, s_h, s_m), s_conv = sstates
+        cache.update({"s_c": s_c, "s_n": s_n, "s_h": s_h, "s_m": s_m,
+                      "s_conv": s_conv.astype(cache["s_conv"].dtype)})
+    return logits, cache
+
+
+def decode_step(params, batch, cache, cfg):
+    x = _embed(params, batch["token"], cfg)
+    has_s = bool(cfg.slstm_every)
+
+    def group(h, inp):
+        gp, mC, mn, mm, mconv = inp[:5]
+        rest = inp[5:]
+
+        def mlayer(hc, lin):
+            lp, C, n, m, conv = lin
+            hc2, (C2, n2, m2), conv2 = xl.mlstm_block_step(
+                lp, hc, cfg, state=(C, n, m), conv_state=conv)
+            return hc2, (C2, n2, m2, conv2)
+
+        h, (mC2, mn2, mm2, mconv2) = jax.lax.scan(
+            mlayer, h, (gp["mlstm"], mC, mn, mm, mconv))
+        if has_s:
+            sc, sn, sh, sm, sconv = rest
+            h, (sc2, sn2, sh2, sm2), sconv2 = xl.slstm_block_step(
+                gp["slstm"], h, cfg, state=(sc, sn, sh, sm),
+                conv_state=sconv)
+            return h, (mC2, mn2, mm2, mconv2, sc2, sn2, sh2, sm2, sconv2)
+        return h, (mC2, mn2, mm2, mconv2)
+
+    gp_tree = {"mlstm": params["mlstm"]}
+    xs = [gp_tree, cache["m_C"], cache["m_n"], cache["m_m"], cache["m_conv"]]
+    if has_s:
+        gp_tree["slstm"] = params["slstm"]
+        xs += [cache["s_c"], cache["s_n"], cache["s_h"], cache["s_m"],
+               cache["s_conv"]]
+    x, outs = jax.lax.scan(group, x, tuple(xs))
+    x = rms_norm(x, params["final_norm_scale"], cfg.norm_eps)
+    logits = _lm_head(params, x, cfg)
+    new_cache = {"m_C": outs[0], "m_n": outs[1], "m_m": outs[2],
+                 "m_conv": outs[3], "pos": cache["pos"] + 1}
+    if has_s:
+        new_cache.update({"s_c": outs[4], "s_n": outs[5], "s_h": outs[6],
+                          "s_m": outs[7], "s_conv": outs[8]})
+    return logits, new_cache

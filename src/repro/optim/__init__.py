@@ -1,0 +1,25 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adagrad,
+    adam,
+    adamw,
+    apply_updates,
+    get_optimizer,
+    rmsprop,
+    sgd,
+)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "adagrad",
+    "adam",
+    "adamw",
+    "apply_updates",
+    "get_optimizer",
+    "rmsprop",
+    "sgd",
+    "constant",
+    "cosine_decay",
+    "warmup_cosine",
+]

@@ -1,0 +1,211 @@
+"""First-party optimiser library (no optax dependency).
+
+The paper's Table I sweeps four optimisers — Adam, SGD, RMSprop, Adagrad —
+as profiling variables, so all four are first-class here.  The API is a
+minimal gradient-transformation pair:
+
+    opt = adam(1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+``lr`` may be a float or a ``step -> lr`` schedule (see
+:mod:`repro.optim.schedules`); schedules read the step counter stored in the
+optimiser state, so the state pytree stays jit/pjit friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+LR = Union[float, Schedule]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    name: str = "optimizer"
+
+
+def _as_schedule(lr: LR) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, dtype=jnp.float32)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    """params + updates, preserving each leaf's dtype (bf16-safe)."""
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates
+    )
+
+
+def _zeros_like_f32(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params
+    )
+
+
+def _decay(updates: PyTree, params: PyTree, weight_decay: float, lr: jnp.ndarray) -> PyTree:
+    if weight_decay == 0.0:
+        return updates
+    return jax.tree_util.tree_map(
+        lambda u, p: u - lr * weight_decay * p.astype(u.dtype), updates, params
+    )
+
+
+def sgd(lr: LR, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = _zeros_like_f32(params)
+        return state
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state["mu"], g32)
+            if nesterov:
+                d = jax.tree_util.tree_map(
+                    lambda m, g: momentum * m + g, mu, g32)
+            else:
+                d = mu
+            new_state = {"step": step, "mu": mu}
+        else:
+            d = g32
+            new_state = {"step": step}
+        updates = jax.tree_util.tree_map(lambda v: -lr_t * v, d)
+        updates = _decay(updates, params, weight_decay, lr_t)
+        return updates, new_state
+
+    return Optimizer(init, update, name="sgd")
+
+
+def adam(lr: LR, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": _zeros_like_f32(params),
+            "v": _zeros_like_f32(params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state["v"], g32)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(m_, v_):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            return -lr_t * mhat / (jnp.sqrt(vhat) + eps)
+
+        updates = jax.tree_util.tree_map(upd, m, v)
+        updates = _decay(updates, params, weight_decay, lr_t)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, name="adam")
+
+
+def adamw(lr: LR, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    opt = adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+    return Optimizer(opt.init, opt.update, name="adamw")
+
+
+def rmsprop(lr: LR, decay: float = 0.9, eps: float = 1e-8,
+            momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        state = {
+            "step": jnp.zeros((), jnp.int32),
+            "nu": _zeros_like_f32(params),
+        }
+        if momentum:
+            state["mu"] = _zeros_like_f32(params)
+        return state
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        nu = jax.tree_util.tree_map(
+            lambda n, g: decay * n + (1 - decay) * jnp.square(g),
+            state["nu"], g32)
+        scaled = jax.tree_util.tree_map(
+            lambda g, n: g / (jnp.sqrt(n) + eps), g32, nu)
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, s: momentum * m + s, state["mu"], scaled)
+            updates = jax.tree_util.tree_map(lambda m: -lr_t * m, mu)
+            new_state = {"step": step, "nu": nu, "mu": mu}
+        else:
+            updates = jax.tree_util.tree_map(lambda s: -lr_t * s, scaled)
+            new_state = {"step": step, "nu": nu}
+        updates = _decay(updates, params, weight_decay, lr_t)
+        return updates, new_state
+
+    return Optimizer(init, update, name="rmsprop")
+
+
+def adagrad(lr: LR, eps: float = 1e-10, initial_accumulator: float = 0.1,
+            weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        acc = jax.tree_util.tree_map(
+            lambda p: jnp.full(p.shape, initial_accumulator, jnp.float32),
+            params)
+        return {"step": jnp.zeros((), jnp.int32), "acc": acc}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        acc = jax.tree_util.tree_map(
+            lambda a, g: a + jnp.square(g), state["acc"], g32)
+        updates = jax.tree_util.tree_map(
+            lambda g, a: -lr_t * g / (jnp.sqrt(a) + eps), g32, acc)
+        updates = _decay(updates, params, weight_decay, lr_t)
+        return updates, {"step": step, "acc": acc}
+
+    return Optimizer(init, update, name="adagrad")
+
+
+_REGISTRY: dict[str, Callable[..., Optimizer]] = {
+    "sgd": sgd,
+    "adam": adam,
+    "adamw": adamw,
+    "rmsprop": rmsprop,
+    "adagrad": adagrad,
+}
+
+
+def get_optimizer(name: str, lr: LR, **kwargs) -> Optimizer:
+    """Look up an optimiser by the name used in the paper's Table I."""
+    key = name.lower()
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown optimiser {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[key](lr, **kwargs)

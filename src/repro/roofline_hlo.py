@@ -1,0 +1,214 @@
+"""Loop-aware HLO cost extraction.
+
+``compiled.cost_analysis()`` visits every instruction ONCE — while-loop
+bodies (our scan-over-layers, flash-attention KV scans, SSD chunk scans)
+are counted a single time, undercounting FLOPs by ~num_layers.  XLA:CPU
+annotates loops with ``known_trip_count``, so we re-derive costs from the
+optimized HLO text, multiplying each computation's cost by the product of
+trip counts on its call path:
+
+  * FLOPs: 2·prod(result)·prod(contracting dims) per ``dot`` (anywhere,
+    including inside fusion bodies);
+  * bytes: operand+result sizes of *top-level* instructions in non-fused
+    computations (fusion internals stay in registers/VMEM — counting at
+    fusion granularity approximates HBM buffer traffic).
+
+Validated against 6·N·D analytics in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:{[\\"]*n[\\"]*:[\\"]*(\d+)')
+_CALL_ATTR_RE = re.compile(
+    r"(?:body|calls|to_apply|branch_computations)=\{?([%\w.,\- ]+)\}?")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+_SKIP_BYTES_OPS = ("parameter(", "tuple(", "get-tuple-element(",
+                   "constant(", "bitcast(", "after-all(", "iota(")
+
+
+def _dims(dims_str: str) -> list[int]:
+    return [int(d) for d in dims_str.split(",") if d]
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _first_shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return _dims(m.group(2))
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    bytes_: float = 0.0
+    coll: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    # (child_name, multiplier)
+    children: list = dataclasses.field(default_factory=list)
+
+
+def parse_computations(hlo: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    shapes: dict[str, str] = {}
+    fused_bodies: set[str] = set()
+    entry: str | None = None
+
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        hdr = _COMP_HDR_RE.match(raw)
+        if hdr and (raw.startswith("%") or raw.startswith("ENTRY")):
+            cur = _Comp(hdr.group(1))
+            comps[cur.name] = cur
+            if raw.startswith("ENTRY"):
+                entry = cur.name
+            shapes = {}
+            continue
+        if raw.startswith("}"):
+            cur = None                   # computation closed — no bleed
+            continue
+        if cur is None or not line or line.startswith("//"):
+            continue
+        if line == "}":
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        # type is everything up to the op name: "<type> <op>(..."
+        op_idx = rest.find("(")
+        type_and_op = rest[:op_idx] if op_idx > 0 else rest
+        parts = type_and_op.rsplit(" ", 1)
+        type_str = parts[0] if len(parts) == 2 else type_and_op
+        op_name = parts[1] if len(parts) == 2 else ""
+        shapes[name] = type_str
+
+        # ---- FLOPs: dot ops -------------------------------------------
+        if op_name == "dot":
+            res_dims = _first_shape_dims(type_str) or []
+            res_elems = 1
+            for d in res_dims:
+                res_elems *= d
+            ops_m = _OPERANDS_RE.search(rest[op_idx:])
+            lhs_name = (ops_m.group(1).split(",")[0].strip()
+                        if ops_m else "")
+            lhs_dims = _first_shape_dims(shapes.get(lhs_name, "")) or []
+            cd = _DOT_DIMS_RE.search(rest)
+            k = 1
+            if cd and lhs_dims:
+                for i in _dims(cd.group(1)):
+                    if i < len(lhs_dims):
+                        k *= lhs_dims[i]
+            cur.flops += 2.0 * res_elems * k
+
+        # ---- collectives (result bytes, by kind; -start counted, -done
+        # skipped so async pairs are not double-counted) --------------------
+        if not op_name.endswith("-done"):
+            for kind in _COLLECTIVES:
+                if kind in op_name:
+                    cur.coll[kind] += _shape_bytes(type_str)
+                    break
+
+        # ---- bytes: top-level buffer traffic ---------------------------
+        if not any(s in rest for s in _SKIP_BYTES_OPS):
+            b = _shape_bytes(type_str)
+            ops_m = _OPERANDS_RE.search(rest[op_idx:]) if op_idx > 0 else None
+            if ops_m:
+                for operand in ops_m.group(1).split(","):
+                    operand = operand.strip()
+                    if operand.startswith("%") and operand in shapes:
+                        b += _shape_bytes(shapes[operand])
+            cur.bytes_ += b
+
+        # ---- call graph --------------------------------------------------
+        if " while(" in rest:
+            trip = 1
+            tm = _TRIP_RE.search(rest)
+            if tm:
+                trip = int(tm.group(1))
+            bm = re.search(r"body=(%[\w.\-]+)", rest)
+            cm = _COND_RE.search(rest)
+            if bm:
+                cur.children.append((bm.group(1), trip))
+            if cm:
+                cur.children.append((cm.group(1), trip))
+        elif " fusion(" in rest:
+            fm = re.search(r"calls=(%[\w.\-]+)", rest)
+            if fm:
+                fused_bodies.add(fm.group(1))
+                cur.children.append((fm.group(1), 1))
+        else:
+            cm = _CALL_ATTR_RE.search(rest)
+            if cm and ("call(" in rest or "conditional(" in rest
+                       or "map(" in rest or "reduce(" in rest
+                       or "scatter(" in rest or "sort(" in rest):
+                for child in cm.group(1).split(","):
+                    child = child.strip()
+                    if child.startswith("%"):
+                        cur.children.append((child, 1))
+
+    # zero out bytes inside fusion bodies (they live in registers/VMEM)
+    for fb in fused_bodies:
+        if fb in comps:
+            comps[fb].bytes_ = 0.0
+    comps["__entry__"] = comps.get(entry, _Comp("__none__"))
+    return comps
+
+
+def corrected_costs(hlo: str) -> dict:
+    """Loop-aware (flops, bytes, collectives) totals from optimized HLO."""
+    comps = parse_computations(hlo)
+    entry = comps["__entry__"]
+    memo: dict[str, tuple] = {}
+
+    def total(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        zero = (0.0, 0.0, {k: 0.0 for k in _COLLECTIVES})
+        if name not in comps or depth > 50:
+            return zero
+        memo[name] = zero                # cycle guard
+        c = comps[name]
+        f, b = c.flops, c.bytes_
+        coll = dict(c.coll)
+        for child, mult in c.children:
+            cf, cb, cc = total(child, depth + 1)
+            f += mult * cf
+            b += mult * cb
+            for k in _COLLECTIVES:
+                coll[k] += mult * cc[k]
+        memo[name] = (f, b, coll)
+        return memo[name]
+
+    f, b, coll = total(entry.name)
+    return {"flops": f, "bytes": b, "collectives": coll,
+            "collective_bytes": float(sum(coll.values()))}

@@ -1,0 +1,4 @@
+from repro.serve.continuous import ContinuousBatchEngine
+from repro.serve.engine import EngineStats, Request, ServeEngine
+
+__all__ = ["ContinuousBatchEngine", "EngineStats", "Request", "ServeEngine"]

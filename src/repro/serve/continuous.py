@@ -1,0 +1,128 @@
+"""Continuous batching engine (slot-based, vLLM-style scheduling discipline).
+
+Unlike :class:`repro.serve.engine.ServeEngine` (static batches), slots are
+freed the moment a sequence finishes and refilled from the broker queue —
+the decode step always runs at full batch width.  Prefill for an incoming
+request runs as its own (batch=1) call and its KV rows are spliced into the
+shared cache; per-slot position masking handles ragged sequence states.
+
+Works with every cache family exposing per-slot batch rows (GQA k/v, MLA
+latents, SSM/xLSTM states): splicing is a pure tree_map over the batch dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+from repro.serve.engine import Request
+
+
+def _batch_dim_index(path_leafname: str) -> Optional[int]:
+    """Index of the batch dim per cache leaf (after layer-stack dims)."""
+    name = path_leafname
+    if name in ("k", "v", "ckv", "kr", "self_k", "self_v", "cross_k",
+                "cross_v", "attn_k", "attn_v", "s_c", "s_n", "s_h", "s_m",
+                "s_conv"):
+        return 1
+    if name in ("ssm", "conv") or name.startswith("m_"):
+        return 2
+    return None                      # pos etc.
+
+
+class ContinuousBatchEngine:
+    """Slot-based continuous batching for one model."""
+
+    def __init__(self, cfg, *, slots: int = 4, max_len: int = 256,
+                 seed: int = 0):
+        assert cfg.family in ("dense", "moe", "vlm") \
+            and cfg.attn_kind == "gqa", \
+            "continuous batching requires the vector-position GQA decode path"
+        self.cfg = cfg
+        self.api = build_model(cfg, impl="naive")
+        self.slots = slots
+        self.max_len = max_len
+        self.params = self.api.init_params(jax.random.key(seed))
+        self.cache = self.api.init_cache(slots, max_len)
+        # per-slot state (host side)
+        self.slot_pos = np.zeros(slots, np.int32)        # tokens consumed
+        self.slot_req: list[Optional[Request]] = [None] * slots
+        self.slot_remaining = np.zeros(slots, np.int32)
+        self.slot_last_tok = np.zeros(slots, np.int32)
+        self._prefill1 = jax.jit(lambda p, b: self.api.prefill(p, b, max_len))
+        self._decode = jax.jit(self.api.decode_step, donate_argnums=(2,))
+        self.steps = 0
+        self.tokens_out = 0
+
+    # -- cache splicing -----------------------------------------------------
+    def _splice(self, slot: int, cache1):
+        """Copy request-cache (batch=1) rows into ``slot`` of the shared
+        cache."""
+        flat_s, treedef = jax.tree_util.tree_flatten_with_path(self.cache)
+        flat_1 = jax.tree_util.tree_leaves(cache1)
+        out = []
+        for (path, big), small in zip(flat_s, flat_1):
+            name = str(getattr(path[-1], "key", path[-1]))
+            bdim = _batch_dim_index(name)
+            if bdim is None:
+                out.append(big)
+                continue
+            idx = [slice(None)] * big.ndim
+            idx[bdim] = slice(slot, slot + 1)
+            out.append(big.at[tuple(idx)].set(small))
+        self.cache = jax.tree_util.tree_unflatten(treedef, out)
+
+    # -- admission ------------------------------------------------------------
+    def _admit(self, req: Request, slot: int):
+        batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+        logits, cache1 = self._prefill1(self.params, batch)
+        self._splice(slot, cache1)
+        self.slot_pos[slot] = len(req.prompt)
+        self.slot_req[slot] = req
+        self.slot_remaining[slot] = req.max_new_tokens
+        self.slot_last_tok[slot] = int(jnp.argmax(logits[0, -1]))
+        req.output = np.zeros(req.max_new_tokens, np.int32)
+        req._written = 0              # type: ignore[attr-defined]
+
+    # -- main loop ------------------------------------------------------------
+    def serve(self, requests: list[Request]) -> list[Request]:
+        queue = sorted(requests, key=lambda r: r.arrived_at)
+        done: list[Request] = []
+        while queue or any(r is not None for r in self.slot_req):
+            # fill free slots
+            for s in range(self.slots):
+                if self.slot_req[s] is None and queue:
+                    self._admit(queue.pop(0), s)
+            # one decode step for all active slots, ragged per-slot positions
+            toks = jnp.asarray(self.slot_last_tok[:, None], jnp.int32)
+            self.cache["pos"] = jnp.asarray(self.slot_pos, jnp.int32)
+            logits, self.cache = self._decode(self.params, {"token": toks},
+                                              self.cache)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            self.steps += 1
+            for s in range(self.slots):
+                req = self.slot_req[s]
+                if req is None:
+                    continue
+                w = req._written        # type: ignore[attr-defined]
+                req.output[w] = self.slot_last_tok[s]
+                req._written = w + 1    # type: ignore[attr-defined]
+                self.tokens_out += 1
+                self.slot_last_tok[s] = nxt[s]
+                self.slot_pos[s] += 1
+                self.slot_remaining[s] -= 1
+                if self.slot_remaining[s] <= 0 \
+                        or self.slot_pos[s] >= self.max_len - 1:
+                    done.append(req)
+                    self.slot_req[s] = None
+        return done
+
+    @property
+    def occupancy(self) -> float:
+        """Mean generated tokens per decode step (≤ slots)."""
+        return self.tokens_out / max(self.steps, 1)

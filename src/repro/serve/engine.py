@@ -1,0 +1,132 @@
+"""Batched serving engine: prefill + decode with a static-batch scheduler.
+
+A deliberately complete (if compact) serving path: requests queue in a
+broker, get batched to the engine's batch size, prefill builds the KV
+cache, greedy/temperature decode runs step-by-step, finished sequences
+free their slots.  The *offloading* decision — serve locally vs ship to an
+edge node — is delegated to ``repro.core.offload`` policies fed by the
+profiling predictor, closing the paper's loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # [S] int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    arrived_at: float = 0.0
+    # filled on completion
+    output: Optional[np.ndarray] = None
+    first_token_s: float = 0.0
+    total_s: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    served: int = 0
+    tokens_out: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / max(self.decode_s, 1e-9)
+
+
+class ServeEngine:
+    """Static-batch serving for one model."""
+
+    def __init__(self, cfg, *, batch_size: int = 4, max_len: int = 256,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.api = build_model(cfg, impl="naive")
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.params = self.api.init_params(jax.random.key(seed))
+        self._prefill = jax.jit(
+            lambda p, b: self.api.prefill(p, b, max_len))
+        self._decode = jax.jit(self.api.decode_step, donate_argnums=(2,))
+        self.stats = EngineStats()
+
+    def load_params(self, params):
+        self.params = params
+
+    # -- core batched generation ------------------------------------------
+    def generate_batch(self, prompts: np.ndarray, max_new: int,
+                       temperature: float = 0.0, seed: int = 0
+                       ) -> np.ndarray:
+        """prompts [B, S] → generated tokens [B, max_new]."""
+        b, s = prompts.shape
+        assert b == self.batch_size, (b, self.batch_size)
+        t0 = time.perf_counter()
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if self.cfg.family == "audio":
+            rng = np.random.default_rng(seed)
+            frames = rng.normal(size=(b, self.cfg.enc_seq,
+                                      self.cfg.d_model)).astype(np.float32)
+            batch["frames"] = jnp.asarray(frames)
+        logits, cache = self._prefill(self.params, batch)
+        jax.block_until_ready(logits)
+        self.stats.prefill_s += time.perf_counter() - t0
+
+        key = jax.random.key(seed)
+        out = np.zeros((b, max_new), np.int32)
+        tok = self._sample(logits[:, -1], temperature, key)
+        t1 = time.perf_counter()
+        for i in range(max_new):
+            out[:, i] = np.asarray(tok[:, 0])
+            logits, cache = self._decode(self.params, {"token": tok}, cache)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits[:, -1], temperature, sub)
+        jax.block_until_ready(logits)
+        self.stats.decode_s += time.perf_counter() - t1
+        self.stats.tokens_out += b * max_new
+        return out
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        probs = jax.nn.softmax(logits / temperature, axis=-1)
+        return jax.random.categorical(key, jnp.log(probs))[:, None] \
+            .astype(jnp.int32)
+
+    # -- broker loop --------------------------------------------------------
+    def serve(self, requests: list[Request]) -> list[Request]:
+        """Process a queue of requests in arrival order, batched."""
+        queue = sorted(requests, key=lambda r: r.arrived_at)
+        done = []
+        while queue:
+            chunk = queue[:self.batch_size]
+            queue = queue[self.batch_size:]
+            # pad the batch to engine size with dummy repeats
+            while len(chunk) < self.batch_size:
+                chunk.append(dataclasses.replace(chunk[-1], rid=-1))
+            s = max(len(r.prompt) for r in chunk)
+            prompts = np.stack([
+                np.pad(r.prompt, (s - len(r.prompt), 0)) for r in chunk])
+            max_new = max(r.max_new_tokens for r in chunk)
+            t0 = time.perf_counter()
+            outs = self.generate_batch(prompts, max_new,
+                                       chunk[0].temperature)
+            dt = time.perf_counter() - t0
+            for r, o in zip(chunk, outs):
+                if r.rid < 0:
+                    continue
+                r.output = o[:r.max_new_tokens]
+                r.total_s = dt
+                done.append(r)
+                self.stats.served += 1
+        return done

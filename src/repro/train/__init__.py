@@ -1,0 +1,3 @@
+from repro.train.loop import TrainConfig, TrainResult, train
+
+__all__ = ["TrainConfig", "TrainResult", "train"]

@@ -1,0 +1,83 @@
+"""LM training loop: config-driven, checkpointed, mesh-aware.
+
+The same loop drives CPU-scale examples (reduced configs, debug mesh) and
+the production launcher (``repro.launch.train``) — only the mesh and the
+config differ.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.data.synthetic import train_batch
+from repro.models import build_model
+from repro.optim import adamw, warmup_cosine
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    batch_size: int = 8
+    seq_len: int = 128
+    lr: float = 3e-4
+    warmup_steps: int = 20
+    log_every: int = 10
+    ckpt_every: int = 0
+    ckpt_dir: str = "checkpoints"
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    steps_per_s: float
+    final_params: object
+
+
+def train(cfg, tcfg: TrainConfig, *, batch_fn: Optional[Callable] = None,
+          jit_step=None, params=None, opt_state=None,
+          log_fn: Callable[[str], None] = print) -> TrainResult:
+    """Train ``cfg`` (a ModelConfig) for ``tcfg.steps`` steps."""
+    api = build_model(cfg, impl="chunked" if cfg.dtype == "bfloat16"
+                      else "naive")
+    opt = adamw(warmup_cosine(tcfg.lr, tcfg.warmup_steps, tcfg.steps))
+    if params is None:
+        params = api.init_params(jax.random.key(tcfg.seed))
+    if opt_state is None:
+        opt_state = opt.init(params)
+
+    if jit_step is None:
+        def step_fn(p, s, b):
+            (loss, metrics), grads = jax.value_and_grad(
+                api.train_loss, has_aux=True)(p, b)
+            from repro.optim import apply_updates
+            updates, s = opt.update(grads, s, p)
+            return apply_updates(p, updates), s, loss, metrics
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    batch_fn = batch_fn or (
+        lambda i: train_batch(cfg, tcfg.batch_size, tcfg.seq_len,
+                              seed=tcfg.seed + i))
+    losses = []
+    t0 = None
+    for i in range(tcfg.steps):
+        batch = batch_fn(i)
+        params, opt_state, loss, metrics = jit_step(params, opt_state, batch)
+        if i == 0:
+            jax.block_until_ready(loss)
+            t0 = time.perf_counter()      # exclude compile
+        losses.append(float(loss))
+        if tcfg.log_every and (i % tcfg.log_every == 0 or
+                               i == tcfg.steps - 1):
+            log_fn(f"[train] step {i} loss={float(loss):.4f}")
+        if tcfg.ckpt_every and i and i % tcfg.ckpt_every == 0:
+            ckpt.save(f"{tcfg.ckpt_dir}/ckpt_{i}.npz", params, step=i)
+    jax.block_until_ready(params)
+    dt = time.perf_counter() - (t0 or time.perf_counter())
+    sps = (tcfg.steps - 1) / dt if dt > 0 else float("nan")
+    return TrainResult(losses=losses, steps_per_s=sps, final_params=params)

@@ -1,0 +1,122 @@
+"""Core paper pipeline tests: profiler → predictors → FL → offload → sched."""
+import numpy as np
+import pytest
+
+from repro.core import dataset as ds
+from repro.core.features import FEATURE_NAMES, featurize, records_to_dataset
+from repro.core.predictors import (GBTRegressor, MLPRegressor, MultiTargetGBT,
+                                   RidgeRegressor, normalised_rmse, r2)
+from repro.core.profiler import profile_workload
+from repro.core.workloads import (WorkloadConfig, full_grid,
+                                  synthetic_image_data)
+
+
+# --------------------------------------------------------------------------
+# workloads + profiler
+# --------------------------------------------------------------------------
+def test_table1_grid_size():
+    grid = list(full_grid())
+    # 2 families × 3 types × 4 epochs × 4 optimisers × 6 lrs × 4 batch sizes
+    assert len(grid) == 2 * 3 * 4 * 4 * 6 * 4 == 2304
+
+
+@pytest.mark.parametrize("kind,ti", [("mlp", 0), ("cnn", 1)])
+def test_profile_workload_measured(kind, ti):
+    wc = WorkloadConfig(kind, ti, epochs=5, optimiser="adam", lr=1e-3,
+                        batch_size=32, dataset_size=128)
+    rec = profile_workload(wc, max_steps=3)
+    assert rec.flops_per_step > 0
+    assert rec.macs_per_step == rec.flops_per_step / 2
+    assert rec.total_time_s > 0 and np.isfinite(rec.total_time_s)
+    assert rec.param_count > 1000
+    assert np.isfinite(rec.final_loss)
+    feats = featurize(rec)
+    assert feats.shape == (len(FEATURE_NAMES),)
+    assert np.isfinite(feats).all()
+
+
+def test_workload_training_learns():
+    """A Table-I CNN must beat chance on the synthetic 10-class task."""
+    wc = WorkloadConfig("cnn", 0, epochs=5, optimiser="adam", lr=3e-3,
+                        batch_size=64, dataset_size=512)
+    rec = profile_workload(wc)
+    assert rec.final_acc > 0.5, rec.final_acc
+
+
+# --------------------------------------------------------------------------
+# predictors (the paper's Fig. 2 comparison, miniature)
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def toy_regression():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, size=(600, 8)).astype(np.float32)
+    y1 = np.sin(3 * x[:, 0]) + x[:, 1] * x[:, 2]
+    y2 = np.exp(x[:, 3]) + 0.5 * x[:, 4] ** 2
+    y = np.stack([y1, y2], axis=1).astype(np.float32)
+    return x[:480], y[:480], x[480:], y[480:]
+
+
+def test_gbt_fits_nonlinear(toy_regression):
+    xtr, ytr, xte, yte = toy_regression
+    m = MultiTargetGBT(n_trees=150, max_depth=6, learning_rate=0.1,
+                       subsample=0.8).fit(xtr, ytr)
+    pred = m.predict(xte)
+    assert r2(pred, yte) > 0.95, r2(pred, yte)
+
+
+def test_gbt_depth_improves(toy_regression):
+    """Paper Fig. 2b: max-depth proportionate to accuracy."""
+    xtr, ytr, xte, yte = toy_regression
+    errs = []
+    for depth in (2, 4, 8):
+        m = GBTRegressor(n_trees=80, max_depth=depth).fit(xtr, ytr[:, 0])
+        errs.append(normalised_rmse(m.predict(xte), yte[:, 0]))
+    assert errs[2] < errs[0], errs
+
+
+def test_mlp_regressor_learns(toy_regression):
+    xtr, ytr, xte, yte = toy_regression
+    m = MLPRegressor(hidden=(64, 32), epochs=150, lr=3e-3).fit(xtr, ytr)
+    assert r2(m.predict(xte), yte) > 0.8
+
+
+def test_ridge_baseline(toy_regression):
+    xtr, ytr, xte, yte = toy_regression
+    m = RidgeRegressor().fit(xtr, ytr)
+    assert r2(m.predict(xte), yte) > 0.3    # linear floor
+
+
+def test_paper_headline_gbt_beats_mlp(toy_regression):
+    """The paper's headline: trees beat MLPs on tabular profiles."""
+    xtr, ytr, xte, yte = toy_regression
+    gbt = MultiTargetGBT(n_trees=200, max_depth=8, subsample=0.8
+                         ).fit(xtr, ytr)
+    mlp = MLPRegressor(hidden=(64, 32), epochs=120, lr=3e-3).fit(xtr, ytr)
+    e_gbt = normalised_rmse(gbt.predict(xte), yte)
+    e_mlp = normalised_rmse(mlp.predict(xte), yte)
+    assert e_gbt < e_mlp, (e_gbt, e_mlp)
+
+
+def test_gbt_subsample_variants(toy_regression):
+    xtr, ytr, xte, yte = toy_regression
+    for sub in (0.5, 0.8, 1.0):
+        m = GBTRegressor(n_trees=60, max_depth=5, subsample=sub
+                         ).fit(xtr, ytr[:, 0])
+        assert normalised_rmse(m.predict(xte), yte[:, 0]) < 0.2
+
+
+# --------------------------------------------------------------------------
+# dataset generation (tiny grid, real measurements)
+# --------------------------------------------------------------------------
+def test_generate_dataset_small():
+    records, data = ds.generate(n_runs=6, max_steps=2, augment_hardware=True)
+    assert len(records) == 6 * len(__import__(
+        "repro.hw", fromlist=["EDGE_DEVICES"]).EDGE_DEVICES)
+    assert data.x.shape[1] == len(FEATURE_NAMES)
+    assert np.isfinite(data.x).all() and np.isfinite(data.y).all()
+    # hardware projection must change total_time but not flops
+    base = records[0]
+    proj = [r for r in records if r.label.startswith(base.label + "@")]
+    assert proj and all(p.flops_per_step == base.flops_per_step
+                        for p in proj)
+    assert any(p.total_time_s != base.total_time_s for p in proj)

@@ -1,0 +1,171 @@
+"""Distribution-layer unit tests: partition rules, cache policies,
+roofline extraction, optimisers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import sharding as shd
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def mesh16():
+    # host has 1 device; an abstract mesh suffices for spec computation
+    import numpy as _np
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def _spec_of(specs, *path):
+    node = specs
+    for p in path:
+        node = node[p]
+    return node
+
+
+def test_param_rules_gemma(mesh16):
+    """8 q-heads can't shard over model=16 → attention replicated on tp;
+    FFN (16384) and vocab (256000) shard."""
+    cfg = get_config("gemma-2b")
+    api = build_model(cfg)
+    specs, report = shd.param_specs(cfg, api.param_shapes(), mesh16,
+                                    mode="serve")
+    assert _spec_of(specs, "embed") == P("model", None)
+    assert _spec_of(specs, "layers", "mlp", "w_gate") == P(None, None,
+                                                           "model")
+    assert _spec_of(specs, "layers", "attn", "wq") == P(None, None, None)
+    assert any("wq" in p for p in report.replicated)
+
+
+def test_param_rules_qwen_heads_shard(mesh16):
+    cfg = get_config("qwen3-1.7b")
+    api = build_model(cfg)
+    specs, _ = shd.param_specs(cfg, api.param_shapes(), mesh16, mode="serve")
+    assert _spec_of(specs, "layers", "attn", "wq") == P(None, None, "model")
+    # kv heads = 8 -> replicated
+    assert _spec_of(specs, "layers", "attn", "wk") == P(None, None, None)
+    assert _spec_of(specs, "layers", "attn", "wo") == P(None, "model", None)
+
+
+def test_param_rules_moe_expert_parallel(mesh16):
+    cfg = get_config("deepseek-moe-16b")
+    api = build_model(cfg)
+    specs, _ = shd.param_specs(cfg, api.param_shapes(), mesh16, mode="serve")
+    assert _spec_of(specs, "layers", "moe", "w_gate") == \
+        P(None, "model", None, None)
+
+
+def test_fsdp_only_in_train(mesh16):
+    cfg = get_config("qwen3-1.7b")
+    api = build_model(cfg)
+    tr, _ = shd.param_specs(cfg, api.param_shapes(), mesh16, mode="train")
+    sv, _ = shd.param_specs(cfg, api.param_shapes(), mesh16, mode="serve")
+    wk_tr = _spec_of(tr, "layers", "attn", "wk")
+    wk_sv = _spec_of(sv, "layers", "attn", "wk")
+    assert "data" in str(wk_tr) and "data" not in str(wk_sv)
+    no, _ = shd.param_specs(cfg, api.param_shapes(), mesh16, mode="train",
+                            no_fsdp=True)
+    assert "data" not in str(_spec_of(no, "layers", "attn", "wk"))
+
+
+def test_cache_specs_policies(mesh16):
+    cfg = get_config("qwen3-1.7b")
+    api = build_model(cfg)
+    # decode_32k-like: B=128 shardable, kv heads 8 NOT divisible by 16
+    shapes = api.cache_shapes(128, 32768)
+    specs = shd.cache_specs(cfg, shapes, mesh16)
+    k = specs["layers"]["k"]
+    assert k[1] in ("data", ("data",))   # batch over data
+    assert k[2] == "model"            # sequence over model (heads 8 < 16)
+    # B=1 long-context: batch unshardable -> seq over (model, data)
+    shapes1 = api.cache_shapes(1, 524288)
+    specs1 = shd.cache_specs(cfg, shapes1, mesh16)
+    assert specs1["layers"]["k"][2] == ("model", "data")
+
+
+def test_cache_specs_heads_shard(mesh16):
+    cfg = get_config("zamba2-1.2b")    # kv=32 divisible
+    api = build_model(cfg)
+    specs = shd.cache_specs(cfg, api.cache_shapes(128, 32768), mesh16)
+    assert specs["attn_k"][-2] == "model"
+
+
+# --------------------------------------------------------------------------
+# roofline HLO parsing
+# --------------------------------------------------------------------------
+SYNTH_HLO = """
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %a = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %b = f32[16,32]{1,0} constant({...})
+  %d = f32[8,32]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,32]{1,0} all-reduce(%d), replica_groups={}
+}
+%cond (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]{1,0}) parameter(0)
+}
+ENTRY %main (x: f32[8,16]) -> f32[8,16] {
+  %x = f32[8,16]{1,0} parameter(0)
+  %w = (s32[], f32[8,16]{1,0}) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %ag = f32[128,16]{1,0} all-gather(%x), dimensions={0}
+}
+"""
+
+
+def test_corrected_costs_loop_multiplier():
+    from repro.roofline_hlo import corrected_costs
+    cc = corrected_costs(SYNTH_HLO)
+    # dot: 2 * 8*32 * 16 = 8192 flops, ×10 trips
+    assert cc["flops"] == 8192 * 10
+    # all-reduce inside loop: 8*32*4 bytes ×10; all-gather outside: 128*16*4
+    assert cc["collectives"]["all-reduce"] == 8 * 32 * 4 * 10
+    assert cc["collectives"]["all-gather"] == 128 * 16 * 4
+
+
+def test_collective_bytes_regex():
+    from repro.roofline import collective_bytes
+    out = collective_bytes(SYNTH_HLO)
+    assert out["all-gather"] == 128 * 16 * 4
+    assert out["all-reduce"] == 8 * 32 * 4
+
+
+# --------------------------------------------------------------------------
+# optimisers match reference formulas
+# --------------------------------------------------------------------------
+def test_adam_matches_reference():
+    from repro.optim import adam, apply_updates
+    opt = adam(0.1, b1=0.9, b2=0.999, eps=1e-8)
+    p = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.5, 0.25])}
+    state = opt.init(p)
+    updates, state = opt.update(g, state, p)
+    m = 0.1 * np.array([0.5, 0.25])
+    v = 0.001 * np.array([0.25, 0.0625])
+    mhat, vhat = m / 0.1, v / 0.001
+    exp = -0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(updates["w"]), exp, rtol=1e-5)
+
+
+@pytest.mark.parametrize("name,lr", [("sgd", 0.05), ("adam", 0.05),
+                                     ("rmsprop", 0.05), ("adagrad", 0.5)])
+def test_all_paper_optimisers_reduce_quadratic(name, lr):
+    from repro.optim import apply_updates, get_optimizer
+    opt = get_optimizer(name, lr)
+    p = {"w": jnp.array([3.0, -2.0, 1.0])}
+    state = opt.init(p)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        updates, state = opt.update(g, state, p)
+        p = apply_updates(p, updates)
+    assert float(jnp.abs(p["w"]).max()) < 0.5, (name, p)
+
+
+def test_schedules():
+    from repro.optim import warmup_cosine
+    s = warmup_cosine(1.0, warmup_steps=10, decay_steps=110)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert abs(float(s(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(s(jnp.asarray(110))) < 0.2

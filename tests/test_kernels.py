@@ -1,0 +1,212 @@
+"""Pallas kernel validation (interpret mode) against pure oracles —
+shape/dtype sweeps per the assignment, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gbt_hist.kernel import grad_histogram_kernel
+from repro.kernels.gbt_hist.ref import grad_histogram_ref
+from repro.kernels.ssm_scan.ops import ssd_chunked_kernel
+
+
+def rnd(seed, *shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.key(seed), shape, jnp.float32) \
+        .astype(dtype) * 0.5
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+FLASH_CASES = [
+    # (B, Sq, Hq, Hkv, D, window, dtype, tol)
+    (1, 128, 4, 4, 32, 0, jnp.float32, 2e-5),
+    (2, 200, 8, 2, 64, 0, jnp.float32, 2e-5),
+    (2, 65, 4, 1, 16, 0, jnp.float32, 2e-5),     # MQA + ragged seq
+    (1, 256, 2, 2, 128, 31, jnp.float32, 2e-5),  # sliding window
+    (2, 128, 4, 2, 64, 0, jnp.bfloat16, 3e-2),
+    (1, 384, 6, 6, 64, 100, jnp.bfloat16, 3e-2),
+]
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,d,window,dtype,tol", FLASH_CASES)
+def test_flash_attention_matches_ref(b, s, hq, hkv, d, window, dtype, tol):
+    q = rnd(1, b, s, hq, d, dtype=dtype)
+    k = rnd(2, b, s, hkv, d, dtype=dtype)
+    v = rnd(3, b, s, hkv, d, dtype=dtype)
+    out = flash_attention(q, k, v, window=window, qblk=64, kblk=64)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), window=window).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(17, 150), st.sampled_from([1, 2, 4]),
+       st.sampled_from([16, 32]), st.integers(0, 40))
+def test_flash_attention_property(s, hkv, d, window):
+    """Random (seq, heads, dim, window): kernel ≡ oracle."""
+    hq = hkv * 2
+    q, k, v = rnd(11, 1, s, hq, d), rnd(12, 1, s, hkv, d), rnd(13, 1, s,
+                                                               hkv, d)
+    out = flash_attention(q, k, v, window=window, qblk=32, kblk=32)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), window=window).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_matches_model_path():
+    """Kernel ≡ the model's chunked_attention (the jnp twin)."""
+    from repro.models.attention import chunked_attention
+    q, k, v = rnd(21, 2, 96, 4, 32), rnd(22, 2, 96, 2, 32), rnd(23, 2, 96,
+                                                                2, 32)
+    out_k = flash_attention(q, k, v, qblk=32, kblk=32)
+    out_m = chunked_attention(q, k, v, q_chunk=32, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_m),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# GBT gradient histogram
+# --------------------------------------------------------------------------
+HIST_CASES = [(100, 5, 16, 64), (1000, 19, 64, 512), (513, 3, 256, 256)]
+
+
+@pytest.mark.parametrize("n,f,bins,blk", HIST_CASES)
+def test_gbt_hist_matches_ref(n, f, bins, blk):
+    rng = np.random.default_rng(n)
+    codes = rng.integers(0, bins, size=(n, f)).astype(np.int32)
+    grad = rng.normal(size=n).astype(np.float32)
+    gsum, cnt = jax.jit(
+        lambda c, g: grad_histogram_kernel(c, g, bins, blk=blk))(
+        jnp.asarray(codes), jnp.asarray(grad))
+    gsum_r, cnt_r = grad_histogram_ref(codes, grad, bins)
+    np.testing.assert_allclose(np.asarray(gsum), gsum_r, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(cnt), cnt_r)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 600), st.integers(1, 8), st.sampled_from([8, 32, 64]))
+def test_gbt_hist_property(n, f, bins):
+    rng = np.random.default_rng(n * 7 + f)
+    codes = rng.integers(0, bins, size=(n, f)).astype(np.int32)
+    grad = rng.normal(size=n).astype(np.float32)
+    gsum, cnt = jax.jit(
+        lambda c, g: grad_histogram_kernel(c, g, bins, blk=128))(
+        jnp.asarray(codes), jnp.asarray(grad))
+    gsum_r, cnt_r = grad_histogram_ref(codes, grad, bins)
+    np.testing.assert_allclose(np.asarray(gsum), gsum_r, rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(cnt), cnt_r)
+    # conservation invariants
+    assert abs(float(cnt.sum()) - n * f) < 1e-6
+    np.testing.assert_allclose(float(gsum.sum()), float(grad.sum()) * f,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_gbt_trains_with_kernel_backend():
+    """End-to-end: GBT fit with use_kernel=True ≈ numpy backend."""
+    from repro.core.predictors import GBTRegressor
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, size=(300, 6)).astype(np.float32)
+    y = np.sin(3 * x[:, 0]) + x[:, 1]
+    m_np = GBTRegressor(n_trees=30, max_depth=4).fit(x, y)
+    m_k = GBTRegressor(n_trees=30, max_depth=4, use_kernel=True).fit(x, y)
+    p_np, p_k = m_np.predict(x), m_k.predict(x)
+    np.testing.assert_allclose(p_k, p_np, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# SSD scan
+# --------------------------------------------------------------------------
+SSD_CASES = [(1, 64, 2, 8, 8, 16), (2, 100, 3, 16, 4, 32),
+             (1, 33, 1, 4, 32, 8)]
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", SSD_CASES)
+def test_ssd_kernel_matches_model(b, s, h, p, n, chunk):
+    from repro.models.mamba2 import ssd_chunked
+    x = rnd(31, b, s, h, p)
+    dt = jax.nn.softplus(rnd(32, b, s, h))
+    bb, cc = rnd(33, b, s, n), rnd(34, b, s, n)
+    a_log = jnp.log(jnp.linspace(1.0, 8.0, h))
+    d_skip = jnp.ones((h,))
+    y_k, st_k = ssd_chunked_kernel(x, dt, a_log, bb, cc, d_skip, chunk=chunk)
+    y_m, st_m = ssd_chunked(x, dt, a_log, bb, cc, d_skip, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_m),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_matches_sequential_ref():
+    from repro.kernels.ssm_scan.kernel import ssd_scan_kernel
+    from repro.kernels.ssm_scan.ref import ssd_scan_ref
+    rng = np.random.default_rng(5)
+    bh, nc, q, p, n, h = 4, 3, 8, 4, 6, 2
+    xdt = rng.normal(size=(bh, nc, q, p)).astype(np.float32)
+    loga = -np.abs(rng.normal(size=(bh, nc, q, 1))).astype(np.float32) * 0.1
+    b = rng.normal(size=(bh // h, nc, q, n)).astype(np.float32)
+    c = rng.normal(size=(bh // h, nc, q, n)).astype(np.float32)
+    y_k, st_k = jax.jit(lambda *a: ssd_scan_kernel(
+        *a, n_heads_per_batch=h))(jnp.asarray(xdt), jnp.asarray(loga),
+                                  jnp.asarray(b), jnp.asarray(c))
+    y_r, st_r = ssd_scan_ref(xdt, loga, b, c, n_heads_per_batch=h)
+    np.testing.assert_allclose(np.asarray(y_k), y_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_k), st_r, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# W8A16 int8 matmul (§Perf pair-A follow-up kernel)
+# --------------------------------------------------------------------------
+INT8_CASES = [(8, 32, 16, jnp.float32), (64, 128, 256, jnp.float32),
+              (33, 70, 90, jnp.float32), (16, 64, 64, jnp.bfloat16)]
+
+
+@pytest.mark.parametrize("m,k,n,dtype", INT8_CASES)
+def test_int8_matmul_matches_ref(m, k, n, dtype):
+    from repro.kernels.int8_matmul.ops import int8_matmul
+    from repro.kernels.int8_matmul.ref import int8_matmul_ref, quantize
+    rng = np.random.default_rng(m + n)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    w_q, scale = quantize(w)
+    x = rnd(7, m, k, dtype=dtype)
+    out = int8_matmul(x, jnp.asarray(w_q), jnp.asarray(scale),
+                      bm=32, bn=32, bk=32)
+    ref = int8_matmul_ref(x, jnp.asarray(w_q), jnp.asarray(scale))
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_int8_quantisation_error_bounded():
+    from repro.kernels.int8_matmul.ref import quant_error_bound
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(128, 64)).astype(np.float32)
+    assert quant_error_bound(w) < 1.0 / 127.0
+
+
+def test_int8_matmul_vs_full_precision_model_level():
+    """End-to-end: dequantised matmul ≈ bf16 matmul within int8 error."""
+    from repro.kernels.int8_matmul.ops import int8_matmul
+    from repro.kernels.int8_matmul.ref import quantize
+    rng = np.random.default_rng(3)
+    w = (rng.normal(size=(96, 48)) * 0.05).astype(np.float32)
+    x = rnd(9, 4, 96)
+    w_q, scale = quantize(w)
+    out_q = int8_matmul(x, jnp.asarray(w_q), jnp.asarray(scale),
+                        bm=32, bn=32, bk=32)
+    out_f = jnp.matmul(x, jnp.asarray(w))
+    rel = float(jnp.abs(out_q - out_f).max()
+                / (jnp.abs(out_f).max() + 1e-9))
+    assert rel < 0.02, rel

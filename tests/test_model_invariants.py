@@ -1,0 +1,154 @@
+"""Model-level invariants:
+
+  * chunked (flash-style) attention ≡ naive attention
+  * mLSTM chunkwise ≡ mLSTM sequential recurrence
+  * SSD chunked scan ≡ SSD single-step recurrence
+  * step-by-step decode ≡ teacher-forced forward (per family)
+  * MLA absorbed decode ≡ naive decode
+  * sliding-window ring-buffer decode ≡ windowed full attention
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.data.synthetic import prefill_batch
+from repro.models import build_model
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+def rnd(key, *shape):
+    return jax.random.normal(jax.random.key(key), shape, jnp.float32) * 0.5
+
+
+# --------------------------------------------------------------------------
+# attention path equivalence
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("hq,hkv,window", [(4, 4, 0), (8, 2, 0), (4, 1, 0),
+                                           (4, 2, 7)])
+def test_chunked_equals_naive(hq, hkv, window):
+    from repro.models.attention import chunked_attention, naive_attention
+    b, s, d = 2, 33, 16
+    q, k, v = rnd(0, b, s, hq, d), rnd(1, b, s, hkv, d), rnd(2, b, s, hkv, d)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    out = chunked_attention(q, k, v, causal=True, window=window,
+                            q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_mlstm_chunked_equals_sequential():
+    from repro.models.xlstm import mlstm_chunked, mlstm_sequential
+    b, s, h, d = 2, 37, 2, 8
+    q, k, v = rnd(0, b, s, h, d), rnd(1, b, s, h, d), rnd(2, b, s, h, d)
+    i_raw = rnd(3, b, s, h) * 2.0
+    f_raw = rnd(4, b, s, h) * 2.0 + 2.0
+    ref, (c_r, n_r, m_r) = mlstm_sequential(q, k, v, i_raw, f_raw)
+    out, (c, n, m) = mlstm_chunked(q, k, v, i_raw, f_raw, chunk=8)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(c, c_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(m, m_r, rtol=1e-4, atol=1e-5)
+
+
+def test_ssd_chunked_equals_stepwise():
+    from repro.models.mamba2 import ssd_chunked, ssd_step
+    b, s, h, p, n = 2, 19, 3, 4, 5
+    x = rnd(0, b, s, h, p)
+    dt = jax.nn.softplus(rnd(1, b, s, h))
+    bb, cc = rnd(2, b, s, n), rnd(3, b, s, n)
+    a_log = jnp.log(jnp.array([1.0, 2.0, 4.0]))
+    d_skip = jnp.ones((h,))
+    y_chunk, state_chunk = ssd_chunked(x, dt, a_log, bb, cc, d_skip, chunk=4)
+
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        y, state = ssd_step(state, x[:, t], dt[:, t], a_log, bb[:, t],
+                            cc[:, t], d_skip)
+        ys.append(y)
+    ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y_chunk, ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(state_chunk, state, rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# decode ≡ forward per family
+# --------------------------------------------------------------------------
+DECODE_ARCHS = ["qwen3-1.7b", "deepseek-v2-lite-16b", "deepseek-moe-16b",
+                "xlstm-350m", "zamba2-1.2b", "whisper-tiny", "gemma-2b"]
+
+
+@pytest.mark.parametrize("name", DECODE_ARCHS)
+def test_decode_matches_forward(name):
+    """prefill(S) then decode one token ≡ prefill(S+1) last-token logits."""
+    cfg = reduced_config(name).replace(dtype="float32")
+    if cfg.num_experts:
+        # decode never hits the capacity limit, so disable dropping in the
+        # teacher-forced reference for an apples-to-apples comparison
+        cfg = cfg.replace(capacity_factor=8.0)
+    api = build_model(cfg, impl="naive")
+    params = api.init_params(jax.random.key(1))
+    s, b = 12, 2
+    pb = prefill_batch(cfg, b, s + 1, seed=3)
+
+    def shorten(batch):
+        out = dict(batch)
+        if "tokens" in out:
+            out["tokens"] = out["tokens"][:, :s]
+        if "embeds" in out:
+            out["embeds"] = out["embeds"][:, :s]
+        return out
+
+    logits_full, _ = api.prefill(params, pb, s + 4)
+    _, cache = api.prefill(params, shorten(pb), s + 4)
+    if cfg.family == "vlm":
+        pytest.skip("vlm decodes tokens but prefills embeds (no shared path)")
+    next_tok = {"token": pb["tokens"][:, s:s + 1]}
+    logits_step, _ = api.decode_step(params, next_tok, cache)
+    np.testing.assert_allclose(np.asarray(logits_step),
+                               np.asarray(logits_full),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_mla_absorbed_equals_naive_decode():
+    cfg = reduced_config("deepseek-v2-lite-16b").replace(dtype="float32")
+    api_n = build_model(cfg.replace(mla_absorbed=False), impl="naive")
+    api_a = build_model(cfg.replace(mla_absorbed=True), impl="naive")
+    params = api_n.init_params(jax.random.key(2))
+    pb = prefill_batch(cfg, 2, 10)
+    _, cache = api_n.prefill(params, pb, 16)
+    tok = {"token": jnp.array([[3], [5]], jnp.int32)}
+    ln, _ = api_n.decode_step(params, tok, cache)
+    la, _ = api_a.decode_step(params, tok, cache)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(ln),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_sliding_window_ring_decode():
+    """SWA ring-buffer decode ≡ full-cache decode with window mask."""
+    cfg = reduced_config("qwen3-1.7b").replace(dtype="float32")
+    cfg_swa = cfg.with_window(8)
+    api = build_model(cfg, impl="naive")
+    api_swa = build_model(cfg_swa, impl="naive")
+    params = api.init_params(jax.random.key(4))
+    s = 13
+    pb = prefill_batch(cfg, 2, s, seed=7)
+    _, cache_full = api.prefill(params, pb, s + 4)
+    _, cache_ring = api_swa.prefill(params, pb, s + 4)
+    assert cache_ring["layers"]["k"].shape[2] == 8   # ring bounded by window
+    tok = {"token": pb["tokens"][:, -1:]}
+    # reference: decode against the full cache of the *windowed* model
+    # (window masking applied inside decode_attention via cfg.window)
+    cfg_wfull = cfg.replace(window=8)
+    import repro.models.transformer as tr
+
+    # full-cache windowed decode: use the unwindowed cache but mask manually
+    logits_ring, _ = api_swa.decode_step(params, tok, cache_ring)
+    # brute force: forward the whole sequence + window via naive attention
+    full_tokens = jnp.concatenate([pb["tokens"], tok["token"]], axis=1)
+    logits_ref, _ = tr.forward(params, {"tokens": full_tokens}, cfg_swa,
+                               impl="naive")
+    np.testing.assert_allclose(np.asarray(logits_ring[:, 0]),
+                               np.asarray(logits_ref[:, -1]),
+                               rtol=5e-4, atol=5e-4)

@@ -1,0 +1,181 @@
+"""Offloading-policy and scheduler tests (paper §II-C/§II-D), incl.
+hypothesis property tests on the decision invariants."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import offload as off
+from repro.core import scheduler as sch
+from repro.core.workloads import WorkloadConfig
+from repro.hw import EDGE_DEVICES, get_device
+
+
+def make_env(link_bw=0.125e9):
+    return off.OffloadEnv(device=get_device("pi5-arm"),
+                          edge=get_device("edge-server-a100"),
+                          link_bw=link_bw, input_bytes=4 * 32 * 784)
+
+
+@pytest.fixture(scope="module")
+def cnn_layers():
+    wc = WorkloadConfig("cnn", 2, epochs=5, optimiser="adam", lr=1e-3,
+                        batch_size=32)
+    return off.workload_layer_costs(wc)
+
+
+def test_optimal_beats_degenerate(cnn_layers):
+    env = make_env()
+    best = off.optimal_split(cnn_layers, env)
+    assert best.total_time_s <= off.local_only(cnn_layers, env).total_time_s
+    assert best.total_time_s <= off.remote_only(cnn_layers, env).total_time_s
+    assert best.total_time_s <= off.greedy_split(cnn_layers, env).total_time_s
+
+
+def test_fast_link_prefers_edge(cnn_layers):
+    """With a huge link and a fast edge server, offload early."""
+    fast = make_env(link_bw=12.5e9)
+    slow = make_env(link_bw=1e4)     # ~10 kB/s: any transfer dominates
+    s_fast = off.optimal_split(cnn_layers, fast).split
+    s_slow = off.optimal_split(cnn_layers, slow).split
+    assert s_fast <= s_slow
+    assert s_slow == len(cnn_layers)
+    assert s_fast == 0
+
+
+def test_qlearning_converges(cnn_layers):
+    pol = off.QLearningPolicy(cnn_layers, make_env(), episodes=4000,
+                              seed=1).train()
+    assert pol.regret() < 0.05 * off.local_only(
+        cnn_layers, make_env()).total_time_s + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.floats(1e6, 1e12), st.floats(1e2, 1e8)),
+                min_size=1, max_size=12),
+       st.floats(1e5, 1e10))
+def test_optimal_split_is_global_minimum(layer_spec, link_bw):
+    layers = [off.LayerCost(f"l{i}", flops=f, act_bytes=a)
+              for i, (f, a) in enumerate(layer_spec)]
+    env = make_env(link_bw=link_bw)
+    best = off.optimal_split(layers, env)
+    for s in range(len(layers) + 1):
+        assert best.total_time_s <= off.split_time(layers, s,
+                                                   env).total_time_s + 1e-12
+
+
+def test_transformer_layer_costs():
+    from repro.configs import get_config
+    cfg = get_config("qwen3-1.7b")
+    layers = off.transformer_layer_costs(cfg, seq_len=1024, batch_size=4)
+    assert len(layers) == cfg.num_layers
+    assert all(l.flops > 0 and l.act_bytes > 0 for l in layers)
+
+
+# --------------------------------------------------------------------------
+# scheduler
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def cluster():
+    nodes = [sch.Node(spec) for spec in EDGE_DEVICES.values()]
+    rng = np.random.default_rng(3)
+    tasks = [sch.Task(f"t{i}", flops=float(rng.uniform(1e9, 5e11)),
+                      input_bytes=float(rng.uniform(1e4, 1e7)))
+             for i in range(12)]
+    return tasks, nodes
+
+
+def test_minmin_beats_random(cluster):
+    tasks, nodes = cluster
+    etc = sch.etc_matrix(tasks, nodes)
+    mk_minmin = sch.min_min(tasks, nodes, etc).makespan
+    mk_rand = np.mean([sch.random_schedule(tasks, nodes, etc, seed=s
+                                           ).makespan for s in range(10)])
+    assert mk_minmin < mk_rand
+
+
+def test_heft_close_to_optimal_small(cluster):
+    tasks, nodes = cluster
+    tasks = tasks[:6]
+    nodes = nodes[:3]
+    etc = sch.etc_matrix(tasks, nodes)
+    opt = sch.optimal_bruteforce(tasks, nodes, etc).makespan
+    heft = sch.heft(tasks, nodes, etc).makespan
+    assert heft <= 1.6 * opt
+
+
+def test_all_schedulers_complete_all_tasks(cluster):
+    tasks, nodes = cluster
+    etc = sch.etc_matrix(tasks, nodes)
+    for name, fn in sch.SCHEDULERS.items():
+        s = fn(tasks, nodes, etc)
+        assert len(s.assignments) == len(tasks), name
+        assert s.makespan > 0
+
+
+def test_predictor_driven_etc(cluster):
+    """Plug a trained GBT in as the ETC source (paper's pipeline)."""
+    tasks, nodes = cluster
+    rng = np.random.default_rng(0)
+    # train a quick GBT mapping (log flops, log peak) -> analytic time
+    feats, ys = [], []
+    for t in tasks:
+        for n in nodes:
+            feats.append([np.log10(t.flops),
+                          np.log10(n.spec.peak_flops_f32),
+                          np.log10(max(t.input_bytes, 1.0))])
+            ys.append(n.exec_time(t))
+    from repro.core.predictors import GBTRegressor
+    m = GBTRegressor(n_trees=60, max_depth=4).fit(
+        np.array(feats, np.float32), np.array(ys))
+
+    def predictor(t, n):
+        f = np.array([[np.log10(t.flops), np.log10(n.spec.peak_flops_f32),
+                       np.log10(max(t.input_bytes, 1.0))]], np.float32)
+        return float(m.predict(f)[0])
+
+    etc_pred = sch.etc_matrix(tasks, nodes, predictor)
+    etc_true = sch.etc_matrix(tasks, nodes)
+    mk_pred = sch.min_min(tasks, nodes, etc_true.copy() * 0 + etc_pred)
+    mk_true = sch.min_min(tasks, nodes, etc_true)
+    # predicted ETC must yield a schedule within 30% of the true-ETC one
+    sim = sch.Schedule([
+        dataclasses.replace(a) for a in mk_pred.assignments])
+    assert sim.makespan <= 1.3 * mk_true.makespan
+
+
+def test_mdp_lower_bounds_heuristics(cluster):
+    tasks, nodes = cluster
+    tasks, nodes = tasks[:5], nodes[:2]
+    etc = sch.etc_matrix(tasks, nodes)
+    mdp = sch.SchedulingMDP(tasks, nodes, etc, backlog_levels=24)
+    v = mdp.solve()
+    mk = sch.min_min(tasks, nodes, etc).makespan
+    assert v <= mk * 1.1   # discretisation slack
+
+
+def test_pomdp_belief_between_oblivious_and_omniscient():
+    """QMDP belief scheduling beats oblivious and approaches omniscient as
+    monitoring accuracy rises (paper §II-D PO-MDP formulation)."""
+    from repro.core import pomdp
+    from repro.hw import EDGE_DEVICES
+    rng = np.random.default_rng(0)
+    nodes = [sch.Node(s) for s in EDGE_DEVICES.values()]
+    tasks = [sch.Task(f"t{i}", flops=float(rng.uniform(5e10, 5e11)))
+             for i in range(60)]
+
+    def mean_makespan(policy, acc):
+        return np.mean([pomdp.simulate(tasks, nodes, policy=policy,
+                                       obs_accuracy=acc, seed=s)
+                        for s in range(8)])
+
+    omni = mean_makespan("omniscient", 0.9)
+    belief_hi = mean_makespan("belief", 0.95)
+    belief_lo = mean_makespan("belief", 0.4)
+    obliv = mean_makespan("oblivious", 0.9)
+    assert belief_hi <= obliv * 1.02, (belief_hi, obliv)
+    assert omni <= belief_hi * 1.05
+    # better monitoring -> better schedules
+    assert belief_hi <= belief_lo * 1.05

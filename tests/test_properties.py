@@ -1,0 +1,129 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.layers import apply_rope, rms_norm
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 32), st.integers(1, 500), st.integers(1, 500))
+def test_rope_is_relative(head_dim, p1, p2):
+    """⟨rope(q,p1+c), rope(k,p2+c)⟩ independent of the common offset c."""
+    head_dim = head_dim * 2          # even
+    q = jax.random.normal(jax.random.key(0), (1, 1, 1, head_dim))
+    k = jax.random.normal(jax.random.key(1), (1, 1, 1, head_dim))
+
+    def dot_at(c):
+        qa = apply_rope(q, jnp.array([[p1 + c]]), 10000.0)
+        ka = apply_rope(k, jnp.array([[p2 + c]]), 10000.0)
+        return float((qa * ka).sum())
+
+    assert abs(dot_at(0) - dot_at(137)) < 1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 64), st.floats(0.1, 100.0))
+def test_rope_preserves_norm(head_dim, scale):
+    head_dim = head_dim * 2
+    x = jax.random.normal(jax.random.key(2), (1, 3, 2, head_dim)) * scale
+    y = apply_rope(x, jnp.arange(3)[None], 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 128), st.floats(0.5, 100.0))
+def test_rms_norm_scale_invariant(d, scale):
+    """Exact invariance only up to the eps regulariser — tolerance covers
+    the eps/var ratio over the tested scale range."""
+    x = jax.random.normal(jax.random.key(3), (2, d))
+    s = jnp.zeros((d,))
+    a = rms_norm(x, s)
+    b = rms_norm(x * scale, s)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(2, 16),
+       st.integers(1, 8))
+def test_moe_router_weights_normalised(t, e, k):
+    from repro.configs import reduced_config
+    from repro.models.moe import route
+    k = min(k, e)
+    cfg = reduced_config("deepseek-moe-16b").replace(num_experts=e, top_k=k)
+    params = {"router": jax.random.normal(jax.random.key(4), (16, e))}
+    x = jax.random.normal(jax.random.key(5), (t, 16))
+    w, idx, aux = route(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), np.ones(t), rtol=1e-5)
+    assert int(idx.max()) < e and int(idx.min()) >= 0
+    assert float(aux) >= 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 100), st.integers(30, 200))
+def test_swa_ring_slot_mask(pos, window):
+    """Ring-buffer decode mask covers exactly min(pos+1, window) keys."""
+    from repro.models.attention import decode_attention
+    b, hq, hkv, dd = 1, 2, 1, 8
+    q = jnp.ones((b, 1, hq, dd))
+    k = jnp.ones((b, window, hkv, dd))
+    v = jnp.arange(window, dtype=jnp.float32)[None, :, None, None] \
+        * jnp.ones((b, window, hkv, dd))
+    out = decode_attention(q, k, v, jnp.asarray(pos), window=window)
+    # uniform scores -> output = mean of valid slot values
+    valid_abs = [p for p in range(max(0, pos - window + 1), pos + 1)]
+    expect = np.mean([p % window for p in valid_abs])
+    np.testing.assert_allclose(float(out[0, 0, 0, 0]), expect, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 5), st.integers(8, 40))
+def test_gbt_monotone_fit_improves_with_trees(depth, n_trees):
+    from repro.core.predictors import GBTRegressor, rmse
+    rng = np.random.default_rng(depth * 100 + n_trees)
+    x = rng.uniform(-1, 1, (200, 4)).astype(np.float32)
+    y = np.sin(2 * x[:, 0]) + x[:, 1]
+    few = GBTRegressor(n_trees=2, max_depth=depth).fit(x, y)
+    many = GBTRegressor(n_trees=n_trees, max_depth=depth).fit(x, y)
+    assert rmse(many.predict(x), y) <= rmse(few.predict(x), y) + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 4))
+def test_scheduler_makespan_lower_bounds(n_tasks, n_nodes):
+    """makespan ≥ max single-task time and ≥ total-work / nodes bound."""
+    from repro.core import scheduler as sch
+    from repro.hw import EDGE_DEVICES
+    rng = np.random.default_rng(n_tasks * 10 + n_nodes)
+    nodes = [sch.Node(s) for s in list(EDGE_DEVICES.values())[:n_nodes]]
+    tasks = [sch.Task(f"t{i}", flops=float(rng.uniform(1e9, 1e11)))
+             for i in range(n_tasks)]
+    etc = sch.etc_matrix(tasks, nodes)
+    s = sch.min_min(tasks, nodes, etc)
+    assert s.makespan >= etc.min(axis=1).max() - 1e-9
+    assert s.makespan >= etc.min(axis=1).sum() / len(nodes) - 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 3))
+def test_capacity_drops_only_reduce_moe_output(seed):
+    """Tokens dropped by capacity produce strictly fewer combined outputs
+    (never garbage): tiny capacity ⇒ output norm ≤ ample capacity."""
+    from repro.configs import reduced_config
+    from repro.models.moe import moe_mlp
+    from repro.models.layers import init_tree
+    from repro.models.moe import moe_param_shapes
+    cfg = reduced_config("deepseek-moe-16b").replace(
+        dtype="float32", num_shared_experts=0)
+    params = init_tree(jax.random.key(seed), moe_param_shapes(cfg),
+                       jnp.float32)
+    x = jax.random.normal(jax.random.key(seed + 10), (32, cfg.d_model))
+    y_small, _ = moe_mlp(params, x, cfg.replace(capacity_factor=0.25))
+    y_big, _ = moe_mlp(params, x, cfg.replace(capacity_factor=8.0))
+    assert float(jnp.linalg.norm(y_small)) <= \
+        float(jnp.linalg.norm(y_big)) * 1.5
+    assert bool(jnp.isfinite(y_small).all())

@@ -1,0 +1,74 @@
+"""Invariants over the shipped results artifacts (skipped if absent) —
+catches regressions in the dry-run/roofline pipeline itself."""
+import json
+import os
+
+import pytest
+
+R = "results"
+
+
+def _load(name):
+    p = os.path.join(R, name)
+    if not os.path.exists(p):
+        pytest.skip(f"{p} not generated")
+    with open(p) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("fname", ["dryrun_single_pod.json",
+                                   "dryrun_multi_pod.json"])
+def test_dryrun_sweep_complete_and_consistent(fname):
+    recs = _load(fname)
+    assert len(recs) == 40                       # 10 archs × 4 shapes
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    failed = [r for r in recs if r["status"] == "FAILED"]
+    assert not failed, [(r["arch"], r["shape"]) for r in failed]
+    assert len(ok) == 39
+    # the single principled skip
+    assert [(r["arch"], r["shape"]) for r in skipped] == \
+        [("whisper-tiny", "long_500k")]
+    for r in ok:
+        ro = r["roofline"]
+        terms = (ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        assert all(t >= 0 for t in terms), r["arch"]
+        dom = {"compute": 0, "memory": 1, "collective": 2}[ro["dominant"]]
+        assert terms[dom] == max(terms), (r["arch"], r["shape"])
+        assert r["fits_hbm16"], (r["arch"], r["shape"])
+        assert r["bytes_per_device_tpu_adjusted"] <= r["bytes_per_device"]
+        if ro["useful_ratio"] is not None:
+            assert 0 < ro["useful_ratio"] <= 1.5, (r["arch"], r["shape"],
+                                                   ro["useful_ratio"])
+
+
+def test_roofline_flops_vs_model_flops_sane():
+    recs = [r for r in _load("dryrun_single_pod.json")
+            if r["status"] == "ok"]
+    for r in recs:
+        ro = r["roofline"]
+        # compiled flops (global) must be >= a third of analytic model flops
+        # (remat/attention push it above; sub-1 only from MoE all-expert
+        # decode shapes and swa variants)
+        glob = ro["flops_per_chip"] * 256
+        assert glob > 0
+        if r["shape"] == "train_4k":
+            assert glob >= 0.8 * ro["model_flops"], (r["arch"],
+                                                     glob / ro["model_flops"])
+
+
+def test_perf_experiments_record_the_journey():
+    recs = _load("perf_experiments.json")
+    names = {r["experiment"] for r in recs}
+    # three required pairs + the bonus pair, baselines present
+    for base in ("A0", "B0", "C0", "D0"):
+        assert any(n.startswith(base) for n in names), names
+    assert all("hypothesis" in r for r in recs)
+    by = {r["experiment"]: r for r in recs if r["status"] == "ok"}
+    # headline wins still hold
+    assert by["A1_mla_absorbed"]["roofline"]["compute_s"] < \
+        0.2 * by["A0_baseline_mla_naive"]["roofline"]["compute_s"]
+    assert by["B3_pin_inner"]["roofline"]["collective_s"] < \
+        0.4 * by["B0_baseline_fsdp"]["roofline"]["collective_s"]
+    assert by["C2_no_sp"]["roofline"]["collective_s"] < \
+        0.2 * by["C0_baseline_sp"]["roofline"]["collective_s"]

@@ -1,0 +1,82 @@
+"""Training loop, serving engine and checkpoint round-trip tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs import reduced_config
+from repro.serve import Request, ServeEngine
+from repro.train import TrainConfig, train
+
+
+def test_train_loop_decreases_loss():
+    cfg = reduced_config("gemma-2b").replace(dtype="float32")
+    res = train(cfg, TrainConfig(steps=8, batch_size=2, seq_len=32,
+                                 lr=2e-3, log_every=0))
+    assert res.losses[-1] < res.losses[0]
+    assert np.isfinite(res.losses).all()
+
+
+def test_serve_engine_batched_requests():
+    cfg = reduced_config("qwen3-1.7b").replace(dtype="float32")
+    engine = ServeEngine(cfg, batch_size=2, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, size=int(rng.integers(4, 24)), dtype=np.int32),
+        max_new_tokens=6) for i in range(5)]
+    done = engine.serve(reqs)
+    assert len(done) == 5
+    assert all(r.output is not None and len(r.output) == 6 for r in done)
+    assert engine.stats.tokens_out >= 5 * 6
+
+
+def test_serve_greedy_deterministic():
+    cfg = reduced_config("xlstm-350m").replace(dtype="float32")
+    engine = ServeEngine(cfg, batch_size=2, max_len=48)
+    prompts = np.tile(np.arange(8, dtype=np.int32)[None], (2, 1))
+    a = engine.generate_batch(prompts, 5)
+    b = engine.generate_batch(prompts, 5)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a[0], a[1])   # identical rows
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32),
+                  "d": [jnp.zeros((2, 2)), jnp.full((1,), 7.0)]}}
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ckpt_3.npz")
+        ckpt.save(path, tree, step=3, metadata={"note": "t"})
+        restored, meta = ckpt.restore(path, tree)
+        assert meta["step"] == 3 and meta["note"] == "t"
+        for x, y in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert ckpt.latest(td) == path
+
+
+def test_continuous_batching_matches_static():
+    """Continuous batching with ragged admission produces the same greedy
+    tokens as one-request-at-a-time static decoding."""
+    from repro.serve.continuous import ContinuousBatchEngine
+    cfg = reduced_config("qwen3-1.7b").replace(dtype="float32")
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in (5, 9, 7, 12, 4, 6)]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=6, arrived_at=i * 0.01)
+            for i, p in enumerate(prompts)]
+    eng = ContinuousBatchEngine(cfg, slots=2, max_len=48, seed=3)
+    done = eng.serve(reqs)
+    assert len(done) == len(prompts)
+    assert eng.occupancy > 1.0            # slots actually shared
+
+    # reference: static batch-1 greedy decode with the same params
+    ref_engine = ServeEngine(cfg, batch_size=1, max_len=48, seed=0)
+    ref_engine.params = eng.params
+    for r in sorted(done, key=lambda r: r.rid):
+        out_ref = ref_engine.generate_batch(
+            r.prompt[None], r.max_new_tokens)
+        np.testing.assert_array_equal(r.output, out_ref[0])
