@@ -1,0 +1,169 @@
+"""Decision-throughput benchmark: scalar oracles vs the vectorized core.
+
+Measures decisions/sec for the three hot decision paths —
+
+  * ``optimal_split``  — O(L²) scalar oracle vs O(L) prefix-sum argmin,
+                         varying model depth L
+  * environment sweep  — per-env scalar loop vs one ``[n_envs, L+1]``
+                         batched latency matrix
+  * Q-learning train   — 3000 scalar ``split_time`` episodes vs the
+                         table-driven batched trainer
+  * ``min_min``/``max_min``/``heft`` — nested-loop ETC heuristics vs the
+                         masked-matrix argmin versions, varying T×N
+
+Run:  PYTHONPATH=src python benchmarks/bench_decisions.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):            # `python benchmarks/bench_...py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import emit
+from repro.core import decisions as dec
+from repro.core import offload as off
+from repro.core import scheduler as sch
+from repro.hw import EDGE_DEVICES, get_device
+
+
+def wall_us(fn, *args, reps: int = 5):
+    """Median wall-clock per call in microseconds (pure CPU, no jax)."""
+    fn(*args)                        # warm caches
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def synth_layers(L: int, seed: int = 0) -> list[off.LayerCost]:
+    rng = np.random.default_rng(seed)
+    return [off.LayerCost(f"l{i}",
+                          flops=float(rng.uniform(1e8, 1e11)),
+                          act_bytes=float(rng.uniform(1e3, 1e7)))
+            for i in range(L)]
+
+
+def make_env(link_bw: float = 0.125e9) -> off.OffloadEnv:
+    return off.OffloadEnv(device=get_device("pi5-arm"),
+                          edge=get_device("edge-server-a100"),
+                          link_bw=link_bw, input_bytes=1e5)
+
+
+def qtrain_scalar_ref(layers, env, episodes: int, seed: int = 0):
+    """Replica of the seed's per-episode scalar Q-learning loop."""
+    import dataclasses
+    buckets = (0.125e9 / 16, 0.125e9 / 4, 0.125e9, 1.25e9)
+    n_actions = len(layers) + 1
+    q = np.zeros((len(buckets), n_actions))
+    rng = np.random.default_rng(seed)
+    for _ in range(episodes):
+        s = int(rng.integers(len(buckets)))
+        if rng.random() < 0.2:
+            a = int(rng.integers(n_actions))
+        else:
+            a = int(np.argmax(q[s]))
+        e = dataclasses.replace(env, link_bw=buckets[s])
+        q[s, a] += 0.2 * (-off.split_time(layers, a, e).total_time_s
+                          - q[s, a])
+    return q
+
+
+def main(smoke: bool = False) -> list[dict]:
+    rows = []
+    reps = 2 if smoke else 7
+
+    # -- all-splits offloading, varying depth -------------------------------
+    env = make_env()
+    for L in (16, 64) if smoke else (16, 64, 256, 1024):
+        layers = synth_layers(L)
+        t_ref = wall_us(off.optimal_split_ref, layers, env, reps=reps)
+        t_vec = wall_us(off.optimal_split, layers, env, reps=reps)
+        rows.append({
+            "name": f"optimal_split_L{L}",
+            "us_per_call": t_vec,
+            "us_scalar": t_ref,
+            "speedup": t_ref / t_vec,
+            "decisions_per_s": 1e6 / t_vec,
+        })
+
+    # -- batched environment sweep ------------------------------------------
+    layers = synth_layers(64)
+    for n_envs in (256,) if smoke else (256, 1024):
+        bws = np.geomspace(1e5, 1e10, n_envs)
+
+        def sweep_scalar():
+            import dataclasses
+            return [off.optimal_split_ref(layers,
+                                          dataclasses.replace(env,
+                                                              link_bw=b))
+                    for b in bws]
+
+        def sweep_vec():
+            return dec.sweep_links(layers, env, bws)
+
+        t_ref = wall_us(sweep_scalar, reps=min(reps, 3))
+        t_vec = wall_us(sweep_vec, reps=reps)
+        rows.append({
+            "name": f"env_sweep_{n_envs}",
+            "us_per_call": t_vec,
+            "us_scalar": t_ref,
+            "speedup": t_ref / t_vec,
+            "decisions_per_s": n_envs * 1e6 / t_vec,
+        })
+
+    # -- Q-learning training -------------------------------------------------
+    episodes = 300 if smoke else 3000
+    layers_q = synth_layers(12)
+    t_ref = wall_us(qtrain_scalar_ref, layers_q, env, episodes, reps=reps)
+    t_vec = wall_us(
+        lambda: off.QLearningPolicy(layers_q, env,
+                                    episodes=episodes).train(), reps=reps)
+    rows.append({
+        "name": f"qlearning_train_{episodes}ep",
+        "us_per_call": t_vec,
+        "us_scalar": t_ref,
+        "speedup": t_ref / t_vec,
+        "episodes_per_s": episodes * 1e6 / t_vec,
+    })
+
+    # -- ETC schedulers ------------------------------------------------------
+    shapes = [(100, 16)] if smoke else [(40, 5), (100, 16), (400, 32)]
+    for n_tasks, n_nodes in shapes:
+        rng = np.random.default_rng(n_tasks)
+        specs = list(EDGE_DEVICES.values())
+        nodes = [sch.Node(specs[j % len(specs)]) for j in range(n_nodes)]
+        tasks = [sch.Task(f"t{i}", flops=float(rng.uniform(1e9, 5e11)),
+                          input_bytes=float(rng.uniform(1e4, 1e7)))
+                 for i in range(n_tasks)]
+        etc = sch.etc_matrix(tasks, nodes)
+        for name in ("min_min", "max_min", "heft"):
+            t_ref = wall_us(sch.SCHEDULERS_REF[name], tasks, nodes, etc,
+                            reps=reps)
+            t_vec = wall_us(sch.SCHEDULERS[name], tasks, nodes, etc,
+                            reps=reps)
+            rows.append({
+                "name": f"{name}_{n_tasks}x{n_nodes}",
+                "us_per_call": t_vec,
+                "us_scalar": t_ref,
+                "speedup": t_ref / t_vec,
+                "schedules_per_s": 1e6 / t_vec,
+            })
+
+    emit(rows, "decisions")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes / few reps for CI")
+    main(smoke=ap.parse_args().smoke)

@@ -3,9 +3,12 @@ link conditions, with the split point chosen by (a) analytic costs and
 (b) the trained GBT profiling model — the paper's end-to-end pipeline."""
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from benchmarks.common import emit, profiling_dataset
+from repro.core import decisions as dec
 from repro.core import offload as off
 from repro.core.predictors import GBTRegressor
 from repro.core.workloads import WorkloadConfig
@@ -20,16 +23,22 @@ def main() -> list[dict]:
                         batch_size=32)
     layers = off.workload_layer_costs(wc)
     rows = []
-    for link_name, bw in LINKS.items():
-        env = off.OffloadEnv(device=get_device("pi5-arm"),
-                             edge=get_device("edge-server-a100"),
-                             link_bw=bw, input_bytes=4 * 32 * 784)
-        pol = off.QLearningPolicy(layers, env, episodes=4000).train()
+    env_base = off.OffloadEnv(device=get_device("pi5-arm"),
+                              edge=get_device("edge-server-a100"),
+                              link_bw=LINKS["wifi"],
+                              input_bytes=4 * 32 * 784)
+    # one [n_links, L+1] sweep + one table-trained policy for all links
+    plan = dec.sweep_links(layers, env_base, list(LINKS.values()))
+    pol = off.QLearningPolicy(layers, env_base,
+                              link_buckets=tuple(LINKS.values()),
+                              episodes=4000).train()
+    for i, (link_name, bw) in enumerate(LINKS.items()):
+        env = dataclasses.replace(env_base, link_bw=bw)
         decisions = {
             "local": off.local_only(layers, env),
             "remote": off.remote_only(layers, env),
             "greedy": off.greedy_split(layers, env),
-            "optimal": off.optimal_split(layers, env),
+            "optimal": plan[i],
             "qlearning": pol.decide(bw),
         }
         for name, d in decisions.items():

@@ -11,14 +11,16 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_fl, bench_kernels, bench_offload,
-                            bench_roofline, bench_scheduler, bench_serving,
-                            fig2a_mlp, fig2b_gbt, fig3_predictions)
+    from benchmarks import (bench_decisions, bench_fl, bench_kernels,
+                            bench_offload, bench_roofline, bench_scheduler,
+                            bench_serving, fig2a_mlp, fig2b_gbt,
+                            fig3_predictions)
     benches = [
         ("fig2a_mlp (paper Fig. 2a)", fig2a_mlp.main),
         ("fig2b_gbt (paper Fig. 2b)", fig2b_gbt.main),
         ("fig3_predictions (paper Fig. 3)", fig3_predictions.main),
         ("offload (paper §II-C)", bench_offload.main),
+        ("decisions (vectorized core)", bench_decisions.main),
         ("scheduler (paper §II-D)", bench_scheduler.main),
         ("fl (paper §II-B)", bench_fl.main),
         ("kernels", bench_kernels.main),

@@ -1,13 +1,19 @@
 """Edge offloading simulation (paper §II-C + §II-D):
 
 Sweeps link conditions for a CNN workload across heterogeneous devices,
-compares all offloading policies (incl. the Q-learning controller), then
-schedules a 30-task queue over the edge cluster with predictor-driven ETC.
+compares all offloading policies (incl. the Q-learning controller), runs a
+dense 4096-point link×device scenario sweep through the vectorized
+decision core, then schedules a 30-task queue over the edge cluster with
+predictor-driven ETC.
 
 Run:  PYTHONPATH=src python examples/offload_simulation.py
 """
+import dataclasses
+import time
+
 import numpy as np
 
+from repro.core import decisions as dec
 from repro.core import offload as off
 from repro.core import scheduler as sch
 from repro.core.workloads import WorkloadConfig
@@ -25,22 +31,44 @@ def main() -> None:
           "(latency ms | split point) ==")
     links = {"2 Mb/s": 0.25e6, "20 Mb/s": 2.5e6, "200 Mb/s": 25e6,
              "2 Gb/s": 250e6}
+    env_base = off.OffloadEnv(device=get_device("pi5-arm"),
+                              edge=get_device("edge-server-a100"),
+                              link_bw=links["2 Mb/s"],
+                              input_bytes=4 * 32 * 784)
+    # one [n_links, L+1] matrix + one table-trained policy cover every link
+    plan = dec.sweep_links(layers, env_base, list(links.values()))
+    pol = off.QLearningPolicy(layers, env_base, episodes=3000,
+                              link_buckets=tuple(links.values())).train()
     header = f"{'link':>10} | " + " | ".join(
         f"{p:>14}" for p in ("local", "remote", "greedy", "optimal",
                              "qlearning"))
     print(header)
-    for name, bw in links.items():
-        env = off.OffloadEnv(device=get_device("pi5-arm"),
-                             edge=get_device("edge-server-a100"),
-                             link_bw=bw, input_bytes=4 * 32 * 784)
-        pol = off.QLearningPolicy(layers, env, episodes=3000,
-                                  link_buckets=tuple(links.values())).train()
+    for i, (name, bw) in enumerate(links.items()):
+        env = dataclasses.replace(env_base, link_bw=bw)
         cells = []
         for d in (off.local_only(layers, env), off.remote_only(layers, env),
-                  off.greedy_split(layers, env),
-                  off.optimal_split(layers, env), pol.decide(bw)):
+                  off.greedy_split(layers, env), plan[i], pol.decide(bw)):
             cells.append(f"{d.total_time_s*1e3:8.2f} @{d.split:<2}")
         print(f"{name:>10} | " + " | ".join(f"{c:>14}" for c in cells))
+
+    print("\n== dense scenario sweep: 1024 link states × 4 devices "
+          "in one batched call ==")
+    bw_grid = np.geomspace(1e5, 2.5e9, 1024)
+    edge = get_device("edge-server-a100")
+    t0 = time.perf_counter()
+    n_total = 0
+    for dev_name in ("pi5-arm", "xps15-i5", "gtx-1650", "jetson-orin-nano"):
+        envs = dec.make_envs(get_device(dev_name), edge, link_bw=bw_grid,
+                             input_bytes=4 * 32 * 784)
+        p = dec.decide_all(layers, envs)
+        n_total += len(p)
+        frac_offload = float(np.mean(p.splits < len(layers)))
+        print(f"  {dev_name:>16}: offloads in {100*frac_offload:5.1f}% of "
+              f"link states, median latency "
+              f"{1e3*float(np.median(p.total_time_s)):7.2f} ms")
+    dt = time.perf_counter() - t0
+    print(f"  [{n_total} optimal decisions in {dt*1e3:.1f} ms — "
+          f"{n_total/dt:,.0f} decisions/s]")
 
     print("\n== scheduling 30 offloaded tasks over the edge cluster ==")
     rng = np.random.default_rng(1)

@@ -9,8 +9,6 @@ import time
 import numpy as np
 
 from repro.configs import reduced_config
-from repro.core import offload as off
-from repro.core.offload import transformer_layer_costs
 from repro.hw import get_device
 from repro.serve import Request, ServeEngine
 
@@ -30,18 +28,20 @@ def main() -> None:
                     arrived_at=time.time() + 0.01 * i)
             for i in range(16)]
 
-    # offloading decision per batch using analytic layer costs
-    layers = transformer_layer_costs(cfg, seq_len=48, batch_size=4)
-    env = off.OffloadEnv(device=get_device("jetson-orin-nano"),
-                         edge=get_device("edge-server-a100"),
-                         link_bw=1.25e9,
-                         input_bytes=4 * 48 * 4)
-    decision = off.optimal_split(layers, env)
-    place = ("edge" if decision.split == 0 else
-             "device" if decision.split == len(layers) else
-             f"split@{decision.split}")
-    print(f"[offload] policy places this workload on: {place} "
-          f"(predicted {decision.total_time_s*1e3:.2f} ms/batch)")
+    # offloading decision per batch — engine delegates to the vectorized
+    # decision core (one latency matrix over the candidate link states)
+    n_layers = max(cfg.num_layers, 1)    # one LayerCost per block
+    link_bws = [0.125e9 / 8, 0.125e9, 1.25e9]
+    plan = engine.offload_plan(link_bws, seq_len=48,
+                               device=get_device("jetson-orin-nano"),
+                               edge=get_device("edge-server-a100"))
+    for i, bw in enumerate(link_bws):
+        decision = plan[i]
+        place = ("edge" if decision.split == 0 else
+                 "device" if decision.split == n_layers else
+                 f"split@{decision.split}")
+        print(f"[offload] link {bw/0.125e9:6.2f} Gb/s -> {place} "
+              f"(predicted {decision.total_time_s*1e3:.2f} ms/batch)")
 
     done = engine.serve(reqs)
     st = engine.stats
@@ -51,9 +51,11 @@ def main() -> None:
           f"prefill {st.prefill_s:.2f}s total")
     sample = done[0]
     print(f"[serve] request {sample.rid}: prompt {len(sample.prompt)} toks "
-          f"-> output {sample.output[:8]}...")
+          f"-> output {sample.output[:8]}..., "
+          f"first token {sample.first_token_s*1e3:.1f} ms")
     assert all(r.output is not None and len(r.output) == r.max_new_tokens
                for r in done)
+    assert all(r.first_token_s > 0 for r in done)
     print("[serve] OK")
 
 

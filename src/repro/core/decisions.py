@@ -1,0 +1,162 @@
+"""Batched, array-native offloading decisions (the vectorized decision core).
+
+:mod:`repro.core.offload` answers "where do I split for *this* device,
+edge, and link?".  This module answers the fleet-scale question: given
+*vectors* of link bandwidths, device specs, and edge specs — thousands of
+concurrent users, each in a different radio condition — compute the full
+``[n_envs, L+1]`` latency matrix in one shot of numpy broadcasting and
+argmin every row.  One call replaces ``n_envs × (L+1)`` scalar
+``split_time`` evaluations, which is what makes scenario sweeps (link
+grids × device mixes × models) and high-rate decision serving tractable.
+
+Usage::
+
+    from repro.core import decisions as dec
+    from repro.core import offload as off
+    from repro.hw import get_device
+
+    layers = off.workload_layer_costs(wc)
+    envs = dec.make_envs(get_device("pi5-arm"),
+                         get_device("edge-server-a100"),
+                         link_bw=np.geomspace(1e5, 1e10, 4096),
+                         input_bytes=4 * 32 * 784)
+    lat = dec.latency_matrix(layers, envs)      # [4096, L+1]
+    plan = dec.decide_all(layers, envs)         # argmin per env
+    plan.splits, plan.total_time_s              # [4096] each
+    plan[0]                                     # -> offload.SplitDecision
+
+Scalar oracles for every path here live in ``repro.core.offload``
+(``split_time`` / ``optimal_split_ref``); the equivalence tests in
+``tests/test_decisions.py`` pin this module to them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Union
+
+import numpy as np
+
+from repro.core.offload import (DEFAULT_EFFICIENCY as EFFICIENCY, LayerCost,
+                                OffloadEnv, SplitDecision)
+from repro.hw import DeviceSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvArrays:
+    """Struct-of-arrays form of ``n_envs`` :class:`OffloadEnv` instances."""
+    dev_flops: np.ndarray            # [E] effective f32 peak of the device
+    edge_flops: np.ndarray           # [E] effective f32 peak of the edge
+    link_bw: np.ndarray              # [E] bytes/s
+    link_latency_s: np.ndarray       # [E]
+    input_bytes: np.ndarray          # [E]
+
+    def __len__(self) -> int:
+        return self.dev_flops.shape[0]
+
+
+def _spec_flops(spec) -> Union[float, np.ndarray]:
+    if isinstance(spec, DeviceSpec):
+        return spec.peak_flops_f32
+    return np.asarray([s.peak_flops_f32 for s in spec], np.float64)
+
+
+def make_envs(device, edge, link_bw,
+              link_latency_s=0.005, input_bytes=0.0) -> EnvArrays:
+    """Broadcast scalars/vectors of specs and link states into an
+    :class:`EnvArrays`.  ``device``/``edge`` may be a single
+    :class:`DeviceSpec` or a sequence of them."""
+    arrs = np.broadcast_arrays(
+        np.atleast_1d(np.asarray(_spec_flops(device), np.float64)),
+        np.atleast_1d(np.asarray(_spec_flops(edge), np.float64)),
+        np.atleast_1d(np.asarray(link_bw, np.float64)),
+        np.atleast_1d(np.asarray(link_latency_s, np.float64)),
+        np.atleast_1d(np.asarray(input_bytes, np.float64)))
+    return EnvArrays(*arrs)
+
+
+def stack_envs(envs: Sequence[OffloadEnv]) -> EnvArrays:
+    """Struct-of-arrays from a list of scalar :class:`OffloadEnv`."""
+    return EnvArrays(
+        np.asarray([e.device.peak_flops_f32 for e in envs], np.float64),
+        np.asarray([e.edge.peak_flops_f32 for e in envs], np.float64),
+        np.asarray([e.link_bw for e in envs], np.float64),
+        np.asarray([e.link_latency_s for e in envs], np.float64),
+        np.asarray([e.input_bytes for e in envs], np.float64))
+
+
+def latency_components(layers: Sequence[LayerCost], envs: EnvArrays,
+                       efficiency: float = EFFICIENCY
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """``(device, transfer, edge)`` latency matrices, each ``[E, L+1]``.
+
+    Column ``s`` of each matrix is the corresponding component of running
+    layers ``[0, s)`` on-device and the rest on-edge — the batched twin of
+    ``offload.split_components``.
+    """
+    n = len(envs)
+    flops = np.fromiter((lc.flops for lc in layers), np.float64,
+                        count=len(layers))
+    act = np.fromiter((lc.act_bytes for lc in layers), np.float64,
+                      count=len(layers))
+    t_dev = flops[None, :] / (envs.dev_flops[:, None] * efficiency)
+    t_edge = flops[None, :] / (envs.edge_flops[:, None] * efficiency)
+    zero = np.zeros((n, 1))
+    dev_cum = np.concatenate([zero, np.cumsum(t_dev, axis=1)], axis=1)
+    edge_cum = np.concatenate(
+        [np.cumsum(t_edge[:, ::-1], axis=1)[:, ::-1], zero], axis=1)
+    xfer_bytes = np.concatenate(
+        [envs.input_bytes[:, None],
+         np.broadcast_to(act[None, :], (n, len(layers)))], axis=1)
+    xfer = envs.link_latency_s[:, None] \
+        + xfer_bytes / np.maximum(envs.link_bw, 1.0)[:, None]
+    xfer[:, -1] = 0.0                # split == L ships nothing
+    return dev_cum, xfer, edge_cum
+
+
+def latency_matrix(layers: Sequence[LayerCost], envs: EnvArrays,
+                   efficiency: float = EFFICIENCY) -> np.ndarray:
+    """Total latency of every (environment, split) pair: ``[E, L+1]``."""
+    dev_cum, xfer, edge_cum = latency_components(layers, envs, efficiency)
+    return dev_cum + xfer + edge_cum
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchDecisions:
+    """Per-environment optimal decisions, struct-of-arrays (all ``[E]``)."""
+    splits: np.ndarray
+    total_time_s: np.ndarray
+    device_time_s: np.ndarray
+    transfer_time_s: np.ndarray
+    edge_time_s: np.ndarray
+
+    def __len__(self) -> int:
+        return self.splits.shape[0]
+
+    def __getitem__(self, i: int) -> SplitDecision:
+        return SplitDecision(int(self.splits[i]),
+                             float(self.total_time_s[i]),
+                             float(self.device_time_s[i]),
+                             float(self.transfer_time_s[i]),
+                             float(self.edge_time_s[i]))
+
+
+def decide_all(layers: Sequence[LayerCost], envs: EnvArrays,
+               efficiency: float = EFFICIENCY) -> BatchDecisions:
+    """Optimal split per environment: one argmin over the latency matrix."""
+    dev_cum, xfer, edge_cum = latency_components(layers, envs, efficiency)
+    total = dev_cum + xfer + edge_cum
+    s = np.argmin(total, axis=1)
+    rows = np.arange(len(envs))
+    return BatchDecisions(s, total[rows, s], dev_cum[rows, s],
+                          xfer[rows, s], edge_cum[rows, s])
+
+
+def sweep_links(layers: Sequence[LayerCost], env_base: OffloadEnv,
+                link_bws) -> BatchDecisions:
+    """Optimal decisions for one device/edge pair across a bandwidth grid —
+    the common "radio conditions sweep" shorthand."""
+    envs = make_envs(env_base.device, env_base.edge,
+                     link_bw=np.asarray(link_bws, np.float64),
+                     link_latency_s=env_base.link_latency_s,
+                     input_bytes=env_base.input_bytes)
+    return decide_all(layers, envs)

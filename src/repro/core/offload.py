@@ -13,6 +13,12 @@ Policies:
                    closed form for a chain graph)
   * ``QLearningPolicy`` — tabular DRL over stochastic link states (the
                    paper names DRL as the usual controller)
+
+The decision core is array-native: :func:`split_times_all` evaluates every
+split latency in O(L) via forward/backward prefix sums, and ``optimal`` /
+``greedy`` are thin argmin/scan wrappers over it.  The ``*_ref`` variants
+keep the original scalar loops as oracles for the equivalence tests.
+Batched sweeps over many environments live in :mod:`repro.core.decisions`.
 """
 from __future__ import annotations
 
@@ -42,8 +48,11 @@ class OffloadEnv:
     input_bytes: float = 0.0     # bytes to ship if split at 0 (raw input)
 
 
-def layer_time(flops: float, dev: DeviceSpec, efficiency: float = 0.35
-               ) -> float:
+DEFAULT_EFFICIENCY = 0.35            # effective MFU of the analytic model
+
+
+def layer_time(flops: float, dev: DeviceSpec,
+               efficiency: float = DEFAULT_EFFICIENCY) -> float:
     """Simple effective-throughput model (efficiency ≈ measured MFU)."""
     return flops / (dev.peak_flops_f32 * efficiency)
 
@@ -81,14 +90,85 @@ def remote_only(layers, env, **kw) -> SplitDecision:
     return split_time(layers, 0, env, **kw)
 
 
-def optimal_split(layers, env, **kw) -> SplitDecision:
+# --------------------------------------------------------------------------
+# Vectorized all-splits evaluation: O(L) prefix sums instead of O(L²)
+# --------------------------------------------------------------------------
+def layer_time_vector(layers: Sequence[LayerCost], dev: DeviceSpec,
+                      time_fn: Optional[Callable[[LayerCost, DeviceSpec],
+                                                 float]] = None
+                      ) -> np.ndarray:
+    """Per-layer execution times on ``dev`` as a float64 ``[L]`` vector."""
+    if time_fn is None:
+        flops = np.fromiter((lc.flops for lc in layers), dtype=np.float64,
+                            count=len(layers))
+        return flops / (dev.peak_flops_f32 * DEFAULT_EFFICIENCY)
+    return np.fromiter((time_fn(lc, dev) for lc in layers),
+                       dtype=np.float64, count=len(layers))
+
+
+def split_components(layers: Sequence[LayerCost], env: OffloadEnv,
+                     time_fn=None
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """``(device, transfer, edge)`` time vectors, each ``[L+1]``, indexed by
+    split point: forward prefix sum of device times, backward prefix sum of
+    edge times, and the activation-transfer vector."""
+    L = len(layers)
+    t_dev = layer_time_vector(layers, env.device, time_fn)
+    t_edge = layer_time_vector(layers, env.edge, time_fn)
+    dev_cum = np.concatenate(([0.0], np.cumsum(t_dev)))
+    edge_cum = np.concatenate((np.cumsum(t_edge[::-1])[::-1], [0.0]))
+    xfer_bytes = np.concatenate(
+        ([env.input_bytes], [lc.act_bytes for lc in layers]))
+    xfer = env.link_latency_s + xfer_bytes / max(env.link_bw, 1.0)
+    xfer[L] = 0.0                     # split == L ships nothing
+    return dev_cum, xfer, edge_cum
+
+
+def split_times_all(layers: Sequence[LayerCost], env: OffloadEnv,
+                    time_fn=None) -> np.ndarray:
+    """Total latency of *every* split point as a ``[L+1]`` vector, O(L)."""
+    dev_cum, xfer, edge_cum = split_components(layers, env, time_fn)
+    return dev_cum + xfer + edge_cum
+
+
+def _decision_at(split: int, dev_cum, xfer, edge_cum) -> SplitDecision:
+    return SplitDecision(int(split),
+                         float(dev_cum[split] + xfer[split]
+                               + edge_cum[split]),
+                         float(dev_cum[split]), float(xfer[split]),
+                         float(edge_cum[split]))
+
+
+def optimal_split(layers, env, *, time_fn=None) -> SplitDecision:
+    """Exact best split: argmin over :func:`split_times_all`."""
+    comps = split_components(layers, env, time_fn)
+    total = comps[0] + comps[1] + comps[2]
+    return _decision_at(int(np.argmin(total)), *comps)
+
+
+def optimal_split_ref(layers, env, **kw) -> SplitDecision:
+    """Scalar O(L²) oracle retained for equivalence tests/benchmarks."""
     return min((split_time(layers, s, env, **kw)
                 for s in range(len(layers) + 1)),
                key=lambda d: d.total_time_s)
 
 
-def greedy_split(layers, env, **kw) -> SplitDecision:
-    """Start local-only; move the split point while it helps."""
+def greedy_split(layers, env, *, time_fn=None) -> SplitDecision:
+    """Start local-only; move the split point while it helps — a scan over
+    the precomputed all-splits vector (one O(L) pass, no re-summation)."""
+    comps = split_components(layers, env, time_fn)
+    total = comps[0] + comps[1] + comps[2]
+    best = len(layers)
+    for s in range(len(layers) - 1, -1, -1):
+        if total[s] <= total[best]:
+            best = s
+        else:
+            break
+    return _decision_at(best, *comps)
+
+
+def greedy_split_ref(layers, env, **kw) -> SplitDecision:
+    """Scalar oracle for :func:`greedy_split` (original walk)."""
     best = local_only(layers, env, **kw)
     for s in range(len(layers) - 1, -1, -1):
         cand = split_time(layers, s, env, **kw)
@@ -122,18 +202,44 @@ class QLearningPolicy:
         return dataclasses.replace(self.env_base,
                                    link_bw=self.link_buckets[bucket])
 
-    def train(self) -> "QLearningPolicy":
+    def latency_table(self) -> np.ndarray:
+        """``[n_buckets, n_actions]`` latency of every (link state, split)."""
+        return np.stack([split_times_all(self.layers, self._env_for(b))
+                         for b in range(len(self.link_buckets))])
+
+    def train(self, batch_size: int = 256) -> "QLearningPolicy":
+        """Table-driven training: rewards come from a precomputed
+        ``[n_buckets, n_actions]`` latency table and episodes run in
+        vectorized batches (greedy actions frozen per batch).  Within a
+        batch the k repeated updates of one ``(s, a)`` cell collapse to
+        the exact closed form ``q ← r + (1-α)^k (q - r)`` because the
+        reward of a cell is deterministic.
+
+        The batch size is capped so the number of greedy refreshes
+        (``episodes / batch``) stays ≥ 2× the action count: with
+        negative rewards and optimistic-zero init, greedy exploration
+        advances one action per refresh, so freezing it for too long
+        leaves deep action spaces (large L) under-visited and the argmax
+        biased toward under-trained cells."""
         rng = np.random.default_rng(self.seed)
-        for ep in range(self.episodes):
-            s = rng.integers(len(self.link_buckets))
-            if rng.random() < self.eps:
-                a = rng.integers(self.n_actions)
-            else:
-                a = int(np.argmax(self.q_[s]))
-            latency = split_time(self.layers, int(a),
-                                 self._env_for(int(s))).total_time_s
-            reward = -latency
-            self.q_[s, a] += self.alpha * (reward - self.q_[s, a])
+        table = self.latency_table()
+        reward = -table
+        n_s, n_a = table.shape
+        batch_size = int(np.clip(self.episodes // (2 * n_a), 1, batch_size))
+        remaining = self.episodes
+        while remaining > 0:
+            m = min(batch_size, remaining)
+            remaining -= m
+            s = rng.integers(n_s, size=m)
+            explore = rng.random(m) < self.eps
+            a = np.where(explore, rng.integers(n_a, size=m),
+                         np.argmax(self.q_[s], axis=1))
+            counts = np.bincount(s * n_a + a,
+                                 minlength=n_s * n_a).reshape(n_s, n_a)
+            decay = (1.0 - self.alpha) ** counts
+            self.q_ = np.where(counts > 0,
+                               reward + decay * (self.q_ - reward),
+                               self.q_)
         return self
 
     def decide(self, link_bw: float) -> SplitDecision:

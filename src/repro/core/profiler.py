@@ -55,8 +55,9 @@ class ProfileRecord:
 
 
 def _cost_of(jitted, *args) -> dict:
+    from repro.roofline import normalize_cost_analysis
     compiled = jitted.lower(*args).compile()
-    cost = compiled.cost_analysis()
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     mem = compiled.memory_analysis()
     peak = (getattr(mem, "temp_size_in_bytes", 0)
             + getattr(mem, "argument_size_in_bytes", 0))

@@ -111,7 +111,33 @@ def random_schedule(tasks, nodes, etc, seed: int = 0) -> Schedule:
 
 def min_min(tasks, nodes, etc) -> Schedule:
     """Classic min-min: repeatedly place the task with the smallest
-    earliest-completion-time."""
+    earliest-completion-time.
+
+    Array-native: one masked argmin over the ``[T, N]`` finish matrix per
+    placement; only the placed node's column is refreshed.  Bit-for-bit
+    equivalent to :func:`min_min_ref` (same arithmetic, same row-major
+    first-occurrence tie-break)."""
+    if len(tasks) == 0:
+        return Schedule([])
+    etc = np.asarray(etc, np.float64).reshape(len(tasks), len(nodes))
+    n_t, n_n = etc.shape
+    avail = np.asarray([n.available_at for n in nodes], np.float64)
+    fin = avail[None, :] + etc
+    active = np.ones(n_t, bool)
+    out = []
+    for _ in range(n_t):
+        flat = int(np.argmin(np.where(active[:, None], fin, np.inf)))
+        i, j = divmod(flat, n_n)
+        out.append(Assignment(tasks[i], nodes[j].spec.name,
+                              float(avail[j]), float(fin[i, j])))
+        avail[j] = fin[i, j]
+        active[i] = False
+        fin[:, j] = avail[j] + etc[:, j]
+    return Schedule(out)
+
+
+def min_min_ref(tasks, nodes, etc) -> Schedule:
+    """Scalar min-min oracle (original nested loops), kept for tests."""
     nodes = _fresh(nodes)
     remaining = list(range(len(tasks)))
     out = []
@@ -129,7 +155,34 @@ def min_min(tasks, nodes, etc) -> Schedule:
 
 
 def max_min(tasks, nodes, etc) -> Schedule:
-    """max-min: place the *largest* task first (better balance for skew)."""
+    """max-min: place the *largest* task first (better balance for skew).
+
+    Vectorized like :func:`min_min`: per-row argmin picks each task's best
+    node, a masked argmax picks the worst-off task."""
+    if len(tasks) == 0:
+        return Schedule([])
+    etc = np.asarray(etc, np.float64).reshape(len(tasks), len(nodes))
+    n_t, n_n = etc.shape
+    avail = np.asarray([n.available_at for n in nodes], np.float64)
+    fin = avail[None, :] + etc
+    active = np.ones(n_t, bool)
+    out = []
+    for _ in range(n_t):
+        masked = np.where(active[:, None], fin, np.inf)
+        best_j = np.argmin(masked, axis=1)
+        best_fin = masked[np.arange(n_t), best_j]
+        i = int(np.argmax(np.where(active, best_fin, -np.inf)))
+        j = int(best_j[i])
+        out.append(Assignment(tasks[i], nodes[j].spec.name,
+                              float(avail[j]), float(fin[i, j])))
+        avail[j] = fin[i, j]
+        active[i] = False
+        fin[:, j] = avail[j] + etc[:, j]
+    return Schedule(out)
+
+
+def max_min_ref(tasks, nodes, etc) -> Schedule:
+    """Scalar max-min oracle (original nested loops), kept for tests."""
     nodes = _fresh(nodes)
     remaining = list(range(len(tasks)))
     out = []
@@ -148,7 +201,26 @@ def max_min(tasks, nodes, etc) -> Schedule:
 
 def heft(tasks, nodes, etc) -> Schedule:
     """HEFT-lite for independent tasks: rank by mean ETC descending, place
-    each on the earliest-finish node."""
+    each on the earliest-finish node (argmin over the node-availability
+    vector, no per-node Python objects)."""
+    if len(tasks) == 0:
+        return Schedule([])
+    etc = np.asarray(etc, np.float64).reshape(len(tasks), len(nodes))
+    avail = np.asarray([n.available_at for n in nodes], np.float64)
+    order = np.argsort(-etc.mean(axis=1))
+    out = []
+    for i in order:
+        j = int(np.argmin(avail + etc[i]))
+        start = float(avail[j])
+        finish = start + float(etc[i, j])
+        avail[j] = finish
+        out.append(Assignment(tasks[int(i)], nodes[j].spec.name,
+                              start, finish))
+    return Schedule(out)
+
+
+def heft_ref(tasks, nodes, etc) -> Schedule:
+    """Scalar HEFT-lite oracle (original loops), kept for tests."""
     nodes = _fresh(nodes)
     order = np.argsort(-etc.mean(axis=1))
     out = []
@@ -181,6 +253,13 @@ SCHEDULERS: dict[str, Callable] = {
     "min_min": min_min,
     "max_min": max_min,
     "heft": heft,
+}
+
+# scalar oracles, exercised by the equivalence tests and benchmarks
+SCHEDULERS_REF: dict[str, Callable] = {
+    "min_min": min_min_ref,
+    "max_min": max_min_ref,
+    "heft": heft_ref,
 }
 
 

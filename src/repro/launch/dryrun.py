@@ -124,7 +124,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            from repro.roofline import normalize_cost_analysis
+            cost = normalize_cost_analysis(compiled.cost_analysis())
             hlo = compiled.as_text()
     except Exception as e:                         # noqa: BLE001
         rec["status"] = "FAILED"

@@ -41,6 +41,14 @@ _TUPLE_RE = re.compile(
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
 
+def normalize_cost_analysis(cost) -> dict:
+    """``compiled.cost_analysis()`` returns a per-device ``[dict]`` on
+    jax 0.4.x and a plain ``dict`` on newer releases — accept both."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _shape_bytes(dtype: str, dims: str) -> int:
     n = 1
     for d in dims.split(","):
@@ -129,6 +137,7 @@ def analyze(name: str, cost: dict, hlo_text: str, *, chips: int,
     """
     from repro.roofline_hlo import corrected_costs
     corrected = corrected_costs(hlo_text)
+    cost = normalize_cost_analysis(cost)
     flops = max(float(cost.get("flops", 0.0)), corrected["flops"])
     byts = float(cost.get("bytes accessed", 0.0))
     # loop-aware collective bytes (per-step collectives inside scans count

@@ -59,15 +59,20 @@ class ServeEngine:
             lambda p, b: self.api.prefill(p, b, max_len))
         self._decode = jax.jit(self.api.decode_step, donate_argnums=(2,))
         self.stats = EngineStats()
+        self.last_first_token_s = 0.0
 
     def load_params(self, params):
         self.params = params
 
     # -- core batched generation ------------------------------------------
     def generate_batch(self, prompts: np.ndarray, max_new: int,
-                       temperature: float = 0.0, seed: int = 0
+                       temperature=0.0, seed: int = 0
                        ) -> np.ndarray:
-        """prompts [B, S] → generated tokens [B, max_new]."""
+        """prompts [B, S] → generated tokens [B, max_new].
+
+        ``temperature`` may be a scalar (whole batch) or a ``[B]`` vector
+        (per-row sampling temperature; ≤ 0 means greedy for that row).
+        """
         b, s = prompts.shape
         assert b == self.batch_size, (b, self.batch_size)
         t0 = time.perf_counter()
@@ -84,6 +89,8 @@ class ServeEngine:
         key = jax.random.key(seed)
         out = np.zeros((b, max_new), np.int32)
         tok = self._sample(logits[:, -1], temperature, key)
+        jax.block_until_ready(tok)
+        self.last_first_token_s = time.perf_counter() - t0
         t1 = time.perf_counter()
         for i in range(max_new):
             out[:, i] = np.asarray(tok[:, 0])
@@ -97,10 +104,16 @@ class ServeEngine:
 
     @staticmethod
     def _sample(logits, temperature, key):
-        if temperature <= 0:
-            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        probs = jax.nn.softmax(logits / temperature, axis=-1)
-        return jax.random.categorical(key, jnp.log(probs))[:, None] \
+        temp = jnp.asarray(temperature, jnp.float32)
+        if temp.ndim == 0:
+            if float(temp) <= 0:
+                return jnp.argmax(logits, axis=-1)[:, None] \
+                    .astype(jnp.int32)
+            temp = jnp.full(logits.shape[:1], temp)
+        greedy = jnp.argmax(logits, axis=-1)
+        sampled = jax.random.categorical(
+            key, logits / jnp.maximum(temp, 1e-6)[:, None])
+        return jnp.where(temp > 0, sampled, greedy)[:, None] \
             .astype(jnp.int32)
 
     # -- broker loop --------------------------------------------------------
@@ -118,15 +131,40 @@ class ServeEngine:
             prompts = np.stack([
                 np.pad(r.prompt, (s - len(r.prompt), 0)) for r in chunk])
             max_new = max(r.max_new_tokens for r in chunk)
+            temps = np.asarray([r.temperature for r in chunk], np.float32)
             t0 = time.perf_counter()
-            outs = self.generate_batch(prompts, max_new,
-                                       chunk[0].temperature)
+            outs = self.generate_batch(prompts, max_new, temps)
             dt = time.perf_counter() - t0
             for r, o in zip(chunk, outs):
                 if r.rid < 0:
                     continue
                 r.output = o[:r.max_new_tokens]
+                r.first_token_s = self.last_first_token_s
                 r.total_s = dt
                 done.append(r)
                 self.stats.served += 1
         return done
+
+    # -- offload delegation -------------------------------------------------
+    def offload_plan(self, link_bws, *, device=None, edge=None,
+                     seq_len: int = 0, link_latency_s: float = 0.005):
+        """Split-computing plan for this model across candidate link states.
+
+        Delegates to the vectorized decision core: one ``[n_links, L+1]``
+        latency matrix and one argmin per link, so the broker can re-plan
+        every batch without measurable overhead.  Returns a
+        :class:`repro.core.decisions.BatchDecisions`; index it to get the
+        ``SplitDecision`` for one link state.
+        """
+        from repro.core.decisions import decide_all, make_envs
+        from repro.core.offload import transformer_layer_costs
+        from repro.hw import get_device
+        device = device or get_device("jetson-orin-nano")
+        edge = edge or get_device("edge-server-a100")
+        seq_len = seq_len or self.max_len
+        layers = transformer_layer_costs(self.cfg, seq_len, self.batch_size)
+        envs = make_envs(device, edge,
+                         link_bw=np.atleast_1d(link_bws).astype(np.float64),
+                         link_latency_s=link_latency_s,
+                         input_bytes=4.0 * self.batch_size * seq_len)
+        return decide_all(layers, envs)

@@ -1,0 +1,207 @@
+"""Vectorized-vs-scalar equivalence for the batched decision core.
+
+Pins the O(L) prefix-sum split evaluation, the batched environment sweep,
+and the array-native schedulers to their retained scalar oracles.  Runs
+without hypothesis on purpose: these are the tier-1 guarantees that the
+perf rewrite changed nothing semantically.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import decisions as dec
+from repro.core import offload as off
+from repro.core import scheduler as sch
+from repro.hw import EDGE_DEVICES, get_device
+
+
+def rand_layers(rng, n):
+    return [off.LayerCost(f"l{i}",
+                          flops=float(rng.uniform(1e6, 1e12)),
+                          act_bytes=float(rng.uniform(1e2, 1e8)))
+            for i in range(n)]
+
+
+def rand_env(rng):
+    specs = list(EDGE_DEVICES.values())
+    return off.OffloadEnv(
+        device=specs[int(rng.integers(len(specs)))],
+        edge=specs[int(rng.integers(len(specs)))],
+        link_bw=float(rng.uniform(1e4, 1e10)),
+        link_latency_s=float(rng.uniform(0.0, 0.05)),
+        input_bytes=float(rng.uniform(0.0, 1e7)))
+
+
+# --------------------------------------------------------------------------
+# split_times_all vs the scalar split_time, every split point
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("trial", range(20))
+def test_split_times_all_matches_scalar(trial):
+    rng = np.random.default_rng(trial)
+    layers = rand_layers(rng, int(rng.integers(1, 24)))
+    env = rand_env(rng)
+    t_all = off.split_times_all(layers, env)
+    assert t_all.shape == (len(layers) + 1,)
+    for s in range(len(layers) + 1):
+        d = off.split_time(layers, s, env)
+        np.testing.assert_allclose(t_all[s], d.total_time_s,
+                                   rtol=1e-9, atol=1e-9)
+
+
+def test_split_components_match_scalar_fields():
+    rng = np.random.default_rng(7)
+    layers = rand_layers(rng, 9)
+    env = rand_env(rng)
+    dev_cum, xfer, edge_cum = off.split_components(layers, env)
+    for s in range(len(layers) + 1):
+        d = off.split_time(layers, s, env)
+        np.testing.assert_allclose(dev_cum[s], d.device_time_s,
+                                   rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(xfer[s], d.transfer_time_s,
+                                   rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(edge_cum[s], d.edge_time_s,
+                                   rtol=1e-9, atol=1e-9)
+
+
+def test_split_times_all_empty_chain():
+    env = rand_env(np.random.default_rng(0))
+    t = off.split_times_all([], env)
+    assert t.shape == (1,) and t[0] == 0.0
+
+
+@pytest.mark.parametrize("trial", range(10))
+def test_optimal_and_greedy_match_refs(trial):
+    rng = np.random.default_rng(100 + trial)
+    layers = rand_layers(rng, int(rng.integers(1, 20)))
+    env = rand_env(rng)
+    a, b = off.optimal_split(layers, env), off.optimal_split_ref(layers, env)
+    np.testing.assert_allclose(a.total_time_s, b.total_time_s,
+                               rtol=1e-9, atol=1e-9)
+    g, h = off.greedy_split(layers, env), off.greedy_split_ref(layers, env)
+    assert g.split == h.split
+    np.testing.assert_allclose(g.total_time_s, h.total_time_s,
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_optimal_split_honours_time_fn():
+    rng = np.random.default_rng(3)
+    layers = rand_layers(rng, 8)
+    env = rand_env(rng)
+
+    def tf(lc, dev):
+        return lc.flops / dev.peak_flops_f32 * 2.0
+
+    a = off.optimal_split(layers, env, time_fn=tf)
+    b = off.optimal_split_ref(layers, env, time_fn=tf)
+    np.testing.assert_allclose(a.total_time_s, b.total_time_s,
+                               rtol=1e-9, atol=1e-9)
+
+
+# --------------------------------------------------------------------------
+# batched environment sweep
+# --------------------------------------------------------------------------
+def test_latency_matrix_matches_per_env_vectors():
+    rng = np.random.default_rng(11)
+    layers = rand_layers(rng, 14)
+    envs_list = [rand_env(rng) for _ in range(32)]
+    lat = dec.latency_matrix(layers, dec.stack_envs(envs_list))
+    assert lat.shape == (32, len(layers) + 1)
+    for i, env in enumerate(envs_list):
+        np.testing.assert_allclose(lat[i], off.split_times_all(layers, env),
+                                   rtol=1e-9, atol=1e-9)
+
+
+def test_decide_all_matches_scalar_loop():
+    rng = np.random.default_rng(13)
+    layers = rand_layers(rng, 10)
+    env = rand_env(rng)
+    bws = np.geomspace(1e4, 1e10, 64)
+    plan = dec.sweep_links(layers, env, bws)
+    assert len(plan) == 64
+    for i, bw in enumerate(bws):
+        d = off.optimal_split(layers,
+                              dataclasses.replace(env, link_bw=float(bw)))
+        np.testing.assert_allclose(plan.total_time_s[i], d.total_time_s,
+                                   rtol=1e-9, atol=1e-9)
+        got = plan[i]
+        np.testing.assert_allclose(
+            got.device_time_s + got.transfer_time_s + got.edge_time_s,
+            got.total_time_s, rtol=1e-9, atol=1e-9)
+
+
+def test_make_envs_broadcasts_device_vectors():
+    devs = [get_device("pi5-arm"), get_device("xps15-i5")]
+    envs = dec.make_envs(devs, get_device("edge-server-a100"),
+                         link_bw=1e8, input_bytes=1e4)
+    assert len(envs) == 2
+    assert envs.dev_flops[0] != envs.dev_flops[1]
+    assert (envs.edge_flops[0] == envs.edge_flops[1]
+            == get_device("edge-server-a100").peak_flops_f32)
+
+
+def test_qlearning_latency_table_matches_split_times():
+    rng = np.random.default_rng(17)
+    layers = rand_layers(rng, 6)
+    env = rand_env(rng)
+    pol = off.QLearningPolicy(layers, env, episodes=10)
+    table = pol.latency_table()
+    assert table.shape == (len(pol.link_buckets), len(layers) + 1)
+    for b, bw in enumerate(pol.link_buckets):
+        e = dataclasses.replace(env, link_bw=bw)
+        np.testing.assert_allclose(table[b], off.split_times_all(layers, e),
+                                   rtol=1e-9, atol=1e-9)
+
+
+# --------------------------------------------------------------------------
+# vectorized schedulers vs scalar oracles
+# --------------------------------------------------------------------------
+def rand_instance(rng, n_tasks, n_nodes):
+    specs = list(EDGE_DEVICES.values())
+    nodes = [sch.Node(specs[int(rng.integers(len(specs)))])
+             for _ in range(n_nodes)]
+    tasks = [sch.Task(f"t{i}", flops=float(rng.uniform(1e8, 1e12)),
+                      input_bytes=float(rng.uniform(1e3, 1e7)))
+             for i in range(n_tasks)]
+    return tasks, nodes, sch.etc_matrix(tasks, nodes)
+
+
+@pytest.mark.parametrize("trial", range(12))
+@pytest.mark.parametrize("name", ["min_min", "max_min", "heft"])
+def test_vectorized_scheduler_matches_ref(name, trial):
+    rng = np.random.default_rng(trial * 31 + len(name))
+    tasks, nodes, etc = rand_instance(rng, int(rng.integers(1, 40)),
+                                      int(rng.integers(1, 8)))
+    fast = sch.SCHEDULERS[name](tasks, nodes, etc)
+    ref = sch.SCHEDULERS_REF[name](tasks, nodes, etc)
+    assert fast.makespan == ref.makespan        # bit-for-bit
+    assert len(fast.assignments) == len(tasks)
+    for a, b in zip(fast.assignments, ref.assignments):
+        assert (a.task.name, a.node) == (b.task.name, b.node)
+        np.testing.assert_allclose([a.start, a.finish], [b.start, b.finish],
+                                   rtol=0, atol=0)
+
+
+def test_vectorized_scheduler_empty_tasks():
+    """Draining to an empty queue must no-op, not crash (etc_matrix of an
+    empty task list is 1-D)."""
+    nodes = [sch.Node(s) for s in list(EDGE_DEVICES.values())[:2]]
+    etc = sch.etc_matrix([], nodes)
+    for name in ("min_min", "max_min", "heft"):
+        s = sch.SCHEDULERS[name]([], nodes, etc)
+        assert s.assignments == [] and s.makespan == 0.0, name
+
+
+def test_vectorized_scheduler_respects_busy_nodes():
+    """Non-zero ``available_at`` (infrastructure monitoring) must be read,
+    not reset, by the array paths."""
+    rng = np.random.default_rng(5)
+    tasks, nodes, etc = rand_instance(rng, 10, 3)
+    for j, n in enumerate(nodes):
+        n.available_at = float(j) * 0.5
+    for name in ("min_min", "max_min", "heft"):
+        fast = sch.SCHEDULERS[name](tasks, nodes, etc)
+        ref = sch.SCHEDULERS_REF[name](tasks, nodes, etc)
+        assert fast.makespan == ref.makespan, name
+        # inputs must not be mutated by either path
+        assert [n.available_at for n in nodes] == [0.0, 0.5, 1.0]

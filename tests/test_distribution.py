@@ -14,9 +14,11 @@ from repro.models import build_model
 @pytest.fixture(scope="module")
 def mesh16():
     # host has 1 device; an abstract mesh suffices for spec computation
-    import numpy as _np
     from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    try:                               # jax >= 0.5: (sizes, names)
+        return AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:                  # jax 0.4.x: ((name, size), ...)
+        return AbstractMesh((("data", 16), ("model", 16)))
 
 
 def _spec_of(specs, *path):

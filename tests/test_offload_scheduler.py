@@ -4,8 +4,7 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_shim import given, settings, st
 
 from repro.core import offload as off
 from repro.core import scheduler as sch

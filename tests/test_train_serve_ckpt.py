@@ -43,6 +43,31 @@ def test_serve_greedy_deterministic():
     np.testing.assert_array_equal(a[0], a[1])   # identical rows
 
 
+def test_serve_per_request_temperature_and_ttft():
+    """serve() must honour each request's temperature (not chunk[0]'s) and
+    populate first_token_s."""
+    cfg = reduced_config("xlstm-350m").replace(dtype="float32")
+    engine = ServeEngine(cfg, batch_size=2, max_len=48)
+    prompts = np.tile(np.arange(8, dtype=np.int32)[None], (2, 1))
+    greedy = engine.generate_batch(prompts, 5)
+    mixed = engine.generate_batch(
+        prompts, 5, temperature=np.array([0.0, 5.0], np.float32))
+    # the greedy row is unaffected by its neighbour's sampling temperature
+    np.testing.assert_array_equal(mixed[0], greedy[0])
+    assert engine.last_first_token_s > 0
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=6,
+                                        dtype=np.int32),
+                    max_new_tokens=4, temperature=0.7 * i)
+            for i in range(3)]
+    done = engine.serve(reqs)
+    assert len(done) == 3
+    assert all(r.first_token_s > 0 for r in done)
+    assert all(r.total_s >= r.first_token_s for r in done)
+
+
 def test_checkpoint_roundtrip():
     tree = {"a": jnp.arange(6.0).reshape(2, 3),
             "b": {"c": jnp.ones((4,), jnp.int32),
