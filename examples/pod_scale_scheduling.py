@@ -71,13 +71,17 @@ def main() -> None:
                          ).fit(x, y)
     fleet = [
         DeviceSpec("v5e-pod", "tpu", "tpu-v5e", 197e12 * 256, 98e12 * 256,
-                   16e9 * 256, 819e9 * 256, 50e9, 1.7),
+                   16e9 * 256, 819e9 * 256, 50e9, 1.7,
+                   tdp_watts=250 * 256),
         DeviceSpec("v5e-half", "tpu", "tpu-v5e", 197e12 * 128, 98e12 * 128,
-                   16e9 * 128, 819e9 * 128, 50e9, 1.7),
+                   16e9 * 128, 819e9 * 128, 50e9, 1.7,
+                   tdp_watts=250 * 128),
         DeviceSpec("v4-pod", "tpu", "tpu-v4", 275e12 * 128, 137e12 * 128,
-                   32e9 * 128, 1200e9 * 128, 45e9, 1.05),
+                   32e9 * 128, 1200e9 * 128, 45e9, 1.05,
+                   tdp_watts=200 * 128),
         DeviceSpec("edge-octo", "gpu", "cuda", 312e12 * 8, 19.5e12 * 8,
-                   40e9 * 8, 1555e9 * 8, 25e9, 1.41),
+                   40e9 * 8, 1555e9 * 8, 25e9, 1.41,
+                   tdp_watts=400 * 8),
     ]
     nodes = [sch.Node(spec) for spec in fleet]
     base = fleet[0]
@@ -99,6 +103,26 @@ def main() -> None:
     for node, lst in by_node.items():
         print(f"  {node}: {len(lst)} workloads "
               f"(e.g. {', '.join(lst[:3])}...)")
+
+    # energy-aware placement: the SAME queue scheduled on a CompositeCost
+    # ETC (latency + joules from the pods' tdp_watts) pushes work off the
+    # most power-hungry pods when the latency gap is small
+    from repro.core.costs import AnalyticCost, CompositeCost
+    print("\n== energy-aware placement (CompositeCost ETC) ==")
+    # bill energy at the assigned pod's TDP over its analytic runtime
+    watts = {n.spec.name: n.spec.tdp_watts for n in nodes}
+    idx = {t.name: i for i, t in enumerate(tasks)}
+    jmap = {n.spec.name: j for j, n in enumerate(nodes)}
+    for label, cost in (
+            ("latency-only", AnalyticCost()),
+            ("latency+energy", CompositeCost(
+                weights={"latency_s": 1.0, "energy_j": 2e-5}))):
+        etc_c = sch.etc_matrix(tasks, nodes, cost=cost)
+        s_c = sch.min_min(tasks, nodes, etc_c)
+        joules = sum(etc[idx[a.task.name], jmap[a.node]] * watts[a.node]
+                     for a in s_c.assignments)
+        print(f"  {label:>15}: makespan(cost) {s_c.makespan:8.3f}, "
+              f"energy {joules/1e3:8.1f} kJ")
 
     # fleet-scale replica sweep — the vectorized min_min makes scheduling
     # the whole mix at tenant multiplicity a sub-second operation

@@ -9,13 +9,18 @@ import time
 import numpy as np
 
 from repro.configs import reduced_config
+from repro.core.costs import CompositeCost
 from repro.hw import get_device
 from repro.serve import Request, ServeEngine
 
 
 def main() -> None:
     cfg = reduced_config("qwen3-1.7b").replace(dtype="float32")
-    engine = ServeEngine(cfg, batch_size=4, max_len=128)
+    # the construction-time cost model becomes the default for every
+    # offload_plan: here a deadline-aware latency+energy blend
+    cost = CompositeCost(weights={"latency_s": 1.0, "energy_j": 0.1},
+                         deadline_s=0.25)
+    engine = ServeEngine(cfg, batch_size=4, max_len=128, cost=cost)
     rng = np.random.default_rng(0)
 
     # 16 requests with ragged prompts
@@ -41,7 +46,9 @@ def main() -> None:
                  "device" if decision.split == n_layers else
                  f"split@{decision.split}")
         print(f"[offload] link {bw/0.125e9:6.2f} Gb/s -> {place} "
-              f"(predicted {decision.total_time_s*1e3:.2f} ms/batch)")
+              f"(predicted {decision.total_time_s*1e3:.2f} ms/batch, "
+              f"{plan.objective('energy_j')[i]:.2f} J, deadline slack "
+              f"{plan.objective('deadline_slack_s')[i]*1e3:.1f} ms)")
 
     done = engine.serve(reqs)
     st = engine.stats

@@ -1,0 +1,351 @@
+"""Pluggable cost models for offloading decisions (the CostModel API).
+
+The decision core in :mod:`repro.core.decisions` is deliberately dumb: it
+argmins a ``[n_envs, L+1]`` matrix.  *What* that matrix measures is this
+module's job.  A :class:`CostModel` maps ``(layers, EnvArrays)`` to a
+``[n_envs, L+1, n_objectives]`` component tensor with named objectives,
+plus a scalarisation that collapses the objective axis for argmin-style
+consumers.  Everything downstream — ``decisions.decide_all`` /
+``sweep_links``, ``scheduler.etc_matrix``, ``ServeEngine.offload_plan``,
+``ContinuousBatchEngine`` re-planning — takes a cost model and stays
+oblivious to whether costs are analytic, predicted, or multi-objective.
+
+Three implementations ship here:
+
+  * :class:`AnalyticCost`   — the FLOPs/roofline time model; bit-for-bit
+    identical to ``decisions.latency_matrix`` (latency is its only
+    objective), so ``decide_all(..., cost=AnalyticCost())`` reproduces the
+    historical behaviour exactly.
+  * :class:`PredictorCost`  — wraps any *fitted* profiling regressor
+    (:class:`repro.core.predictors.Regressor`: GBT / MLP / ridge).  The
+    model predicts per-layer execution times from layer + hardware
+    features (``DeviceSpec.as_features``), in ONE vectorised ``predict``
+    call per decision sweep regardless of how many environments are being
+    swept — the paper's profiling→prediction→decision loop at fleet scale.
+  * :class:`CompositeCost`  — multi-objective: latency, energy (joules
+    from ``tdp_watts``), price, and deadline slack, with scalarisation
+    weights and :func:`pareto_front` extraction over the batched matrix.
+
+Usage::
+
+    from repro.core import costs as co, decisions as dec
+
+    cost = co.CompositeCost(weights={"latency_s": 1.0, "energy_j": 0.02})
+    plan = dec.decide_all(layers, envs, cost=cost)
+    plan.objective("energy_j")            # [E] joules at the chosen split
+    front = co.pareto_front(cost.components(layers, envs))  # [E, L+1] mask
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (TYPE_CHECKING, Callable, ClassVar, Mapping, Optional,
+                    Protocol, Sequence)
+
+import numpy as np
+
+from repro.core.decisions import (EnvArrays, latency_components, make_envs,
+                                  transfer_bytes, transfer_matrix)
+from repro.core.offload import DEFAULT_EFFICIENCY, LayerCost
+from repro.hw import DeviceSpec
+
+if TYPE_CHECKING:                # typing-only: keep this module numpy-only
+    from repro.core.predictors.common import Regressor
+
+
+class CostModel(Protocol):
+    """Maps (layers, envs) to named per-objective cost components.
+
+    ``components`` returns ``[n_envs, L+1, len(objectives)]``; column ``s``
+    is the cost of running layers ``[0, s)`` on-device and the rest on the
+    edge.  ``scalarize`` collapses the objective axis to the ``[E, L+1]``
+    matrix that argmin-style consumers rank splits by.  Implementations
+    may additionally expose ``latency_parts(layers, envs) -> (device,
+    transfer, edge)`` latency matrices (used to fill the per-split
+    breakdown in :class:`repro.core.decisions.DecisionPlan`) and
+    ``task_matrix(tasks, nodes)`` (a fast path for
+    :func:`repro.core.scheduler.etc_matrix`).
+    """
+
+    @property
+    def objectives(self) -> tuple[str, ...]: ...
+
+    def components(self, layers: Sequence[LayerCost],
+                   envs: EnvArrays) -> np.ndarray: ...
+
+    def scalarize(self, components: np.ndarray) -> np.ndarray: ...
+
+
+# --------------------------------------------------------------------------
+# Pareto-front extraction over batched component tensors
+# --------------------------------------------------------------------------
+def pareto_front(costs: np.ndarray) -> np.ndarray:
+    """Boolean mask of non-dominated points, all objectives minimised.
+
+    ``costs`` is ``[N, K]`` (one candidate set) or ``[E, S, K]`` (batched:
+    one candidate set per environment); the mask has the input's leading
+    shape.  Point ``j`` dominates ``i`` iff it is no worse on every
+    objective and strictly better on at least one.
+    """
+    c = np.asarray(costs, np.float64)
+    if c.ndim < 2:
+        raise ValueError(f"costs must be [N, K] or [E, S, K], got {c.shape}")
+    # [..., i, j]: does j weakly/strictly improve on i in every/any objective
+    le = np.all(c[..., None, :, :] <= c[..., :, None, :], axis=-1)
+    lt = np.any(c[..., None, :, :] < c[..., :, None, :], axis=-1)
+    dominated = np.any(le & lt, axis=-1)
+    return ~dominated
+
+
+def scalarize_weighted(components: np.ndarray,
+                       objectives: Sequence[str],
+                       weights: Optional[Mapping[str, float]]) -> np.ndarray:
+    """Weighted sum over the trailing objective axis.  ``weights`` maps
+    objective name → weight; omitted names weigh 0, ``None`` means equal
+    weight 1 for every objective.  Unknown names raise — a typo would
+    otherwise zero the cost matrix and silently degenerate the argmin."""
+    if weights is None:
+        w = np.ones(len(objectives), np.float64)
+    else:
+        unknown = set(weights) - set(objectives)
+        if unknown:
+            raise KeyError(f"unknown objective(s) {sorted(unknown)}; "
+                           f"known: {list(objectives)}")
+        w = np.asarray([float(weights.get(n, 0.0)) for n in objectives],
+                       np.float64)
+    return np.asarray(components, np.float64) @ w
+
+
+# --------------------------------------------------------------------------
+# Analytic cost: the roofline time model, latency-only
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AnalyticCost:
+    """FLOPs / (peak × efficiency) latency — wraps ``latency_matrix``
+    bit-for-bit, as the single objective ``latency_s``."""
+
+    efficiency: float = DEFAULT_EFFICIENCY
+
+    objectives: ClassVar[tuple[str, ...]] = ("latency_s",)
+
+    def __post_init__(self):
+        # memo keyed on (layers, envs) identity — components() and the
+        # DecisionPlan breakdown inside one decide_all share one compute.
+        # Callers must treat layers/envs as immutable (no in-place edits).
+        object.__setattr__(self, "_parts_cache", (None, None, None))
+
+    def components(self, layers, envs) -> np.ndarray:
+        dev_cum, xfer, edge_cum = self.latency_parts(layers, envs)
+        return (dev_cum + xfer + edge_cum)[..., None]
+
+    def scalarize(self, components: np.ndarray) -> np.ndarray:
+        return np.asarray(components)[..., 0]
+
+    def latency_parts(self, layers, envs):
+        cached = self._parts_cache
+        if cached[0] is layers and cached[1] is envs:
+            return cached[2]
+        parts = latency_components(layers, envs, self.efficiency)
+        object.__setattr__(self, "_parts_cache", (layers, envs, parts))
+        return parts
+
+
+# --------------------------------------------------------------------------
+# Predictor cost: the trained profiling model in the decision loop
+# --------------------------------------------------------------------------
+def default_layer_features(layers: Sequence[LayerCost],
+                           spec: DeviceSpec) -> np.ndarray:
+    """``[L, F]`` feature rows for per-layer execution-time prediction:
+    log-scaled layer size plus the hardware features the paper's profiling
+    models train on (``DeviceSpec.as_features``, incl. ``hw_tdp_watts``)."""
+    n = len(layers)
+    hw = spec.as_features()
+    flops = np.fromiter((lc.flops for lc in layers), np.float64, count=n)
+    act = np.fromiter((lc.act_bytes for lc in layers), np.float64, count=n)
+    cols = [
+        np.log10(np.maximum(flops, 1.0)),
+        np.log10(np.maximum(act, 1.0)),
+        np.full(n, np.log10(max(hw["hw_peak_flops"], 1.0))),
+        np.full(n, np.log10(max(hw["hw_hbm_bw"], 1.0))),
+        np.full(n, hw["hw_clock_ghz"]),
+        np.full(n, hw["hw_is_accelerated"]),
+        np.full(n, hw["hw_tdp_watts"]),
+    ]
+    return np.stack(cols, axis=1).astype(np.float32)
+
+
+@dataclasses.dataclass
+class PredictorCost:
+    """Latency from a fitted profiling regressor (GBT / MLP / ridge).
+
+    Per-layer times for the device and edge come from ONE batched
+    ``model.predict`` over ``[2L, F]`` feature rows — independent of the
+    number of environments being swept, so fleet-scale sweeps stay one
+    predict call.  Transfer latency keeps the analytic link model (the
+    profiler predicts compute, the radio is observed state).
+
+    Predictions and latency parts are memoised on the *identity* of the
+    layers/envs arguments: treat them as immutable (build fresh objects
+    per scenario rather than mutating in place), and build a fresh
+    PredictorCost after refitting the model.
+    """
+
+    model: "Regressor"                   # fitted: predict([N, F]) -> [N]
+    device: DeviceSpec
+    edge: DeviceSpec
+    feature_fn: Callable[[Sequence[LayerCost], DeviceSpec], np.ndarray] = \
+        default_layer_features
+    target_index: int = 0                # column, for multi-target models
+
+    objectives: ClassVar[tuple[str, ...]] = ("latency_s",)
+
+    def __post_init__(self):
+        self._times_cache: tuple = (None, None)
+        self._parts_cache: tuple = (None, None, None)
+
+    def layer_times(self, layers) -> tuple[np.ndarray, np.ndarray]:
+        """Predicted per-layer times ``(device [L], edge [L])`` — one
+        ``predict`` call, clamped to ≥ 0.  Memoised on the layers object,
+        so ``components`` + ``latency_parts`` within one decision sweep
+        share a single predict call."""
+        if self._times_cache[0] is layers:
+            return self._times_cache[1]
+        feats = np.concatenate([self.feature_fn(layers, self.device),
+                                self.feature_fn(layers, self.edge)], axis=0)
+        pred = np.asarray(self.model.predict(feats), np.float64)
+        if pred.ndim == 2:
+            pred = pred[:, self.target_index]
+        pred = np.maximum(pred, 0.0)
+        times = (pred[:len(layers)], pred[len(layers):])
+        self._times_cache = (layers, times)
+        return times
+
+    def latency_parts(self, layers, envs):
+        cached = self._parts_cache
+        if cached[0] is layers and cached[1] is envs:
+            return cached[2]
+        t_dev, t_edge = self.layer_times(layers)
+        dev_cum = np.concatenate(([0.0], np.cumsum(t_dev)))
+        edge_cum = np.concatenate((np.cumsum(t_edge[::-1])[::-1], [0.0]))
+        shape = (len(envs), len(layers) + 1)
+        parts = (np.broadcast_to(dev_cum, shape),
+                 transfer_matrix(layers, envs),
+                 np.broadcast_to(edge_cum, shape))
+        self._parts_cache = (layers, envs, parts)
+        return parts
+
+    def components(self, layers, envs) -> np.ndarray:
+        dev_cum, xfer, edge_cum = self.latency_parts(layers, envs)
+        return (dev_cum + xfer + edge_cum)[..., None]
+
+    def scalarize(self, components: np.ndarray) -> np.ndarray:
+        return np.asarray(components)[..., 0]
+
+    def task_matrix(self, tasks, nodes) -> np.ndarray:
+        """Predicted ``[T, N]`` expected-time-to-compute matrix for
+        :func:`repro.core.scheduler.etc_matrix` — one ``predict`` over all
+        (task, node) pairs, plus the analytic input-transfer term."""
+        layers = [LayerCost(t.name, flops=t.flops, act_bytes=0.0)
+                  for t in tasks]
+        feats = np.concatenate([self.feature_fn(layers, n.spec)
+                                for n in nodes], axis=0)     # [N*T, F]
+        pred = np.asarray(self.model.predict(feats), np.float64)
+        if pred.ndim == 2:
+            pred = pred[:, self.target_index]
+        comp = np.maximum(pred, 0.0).reshape(len(nodes), len(tasks)).T
+        link = np.asarray([n.spec.link_bw for n in nodes], np.float64)
+        inp = np.asarray([t.input_bytes for t in tasks], np.float64)
+        return comp + inp[:, None] / np.maximum(link, 1.0)[None, :]
+
+
+# --------------------------------------------------------------------------
+# Composite cost: latency + energy + price + deadline slack
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class CompositeCost:
+    """Multi-objective cost over a latency-producing base model.
+
+    Objectives, in order:
+
+      * ``latency_s``        — end-to-end latency from ``base``
+      * ``energy_j``         — device compute at ``dev_tdp_watts``, radio
+                               at ``radio_watts`` during transfer, edge
+                               compute at ``edge_tdp_watts``
+      * ``price``            — billed edge seconds + shipped gigabytes
+      * ``deadline_slack_s`` — ``max(0, latency - deadline_s)`` overrun
+
+    ``scalarize`` applies ``weights`` (objective name → weight; ``None``
+    means equal weights); :meth:`pareto` extracts the non-dominated splits
+    per environment when no single scalarisation is trusted.
+    """
+
+    base: CostModel = dataclasses.field(default_factory=AnalyticCost)
+    weights: Optional[Mapping[str, float]] = None
+    radio_watts: float = 2.5             # device NIC/radio power while TX
+    price_per_edge_s: float = 0.0
+    price_per_gb: float = 0.0
+    deadline_s: float = np.inf
+
+    objectives: ClassVar[tuple[str, ...]] = (
+        "latency_s", "energy_j", "price", "deadline_slack_s")
+
+    def __post_init__(self):
+        if not hasattr(self.base, "latency_parts"):
+            raise TypeError(
+                f"CompositeCost base {type(self.base).__name__} must "
+                "expose latency_parts(layers, envs) — the energy/price/"
+                "slack objectives need the (device, transfer, edge) "
+                "latency decomposition, not just totals")
+
+    def components(self, layers, envs) -> np.ndarray:
+        dev_t, xfer_t, edge_t = self.base.latency_parts(layers, envs)
+        total = dev_t + xfer_t + edge_t
+        dev_w = _tdp_or_zero(envs.dev_tdp_watts, len(envs))
+        edge_w = _tdp_or_zero(envs.edge_tdp_watts, len(envs))
+        energy = dev_t * dev_w[:, None] + xfer_t * self.radio_watts \
+            + edge_t * edge_w[:, None]
+        price = edge_t * self.price_per_edge_s \
+            + transfer_bytes(layers, envs) / 1e9 * self.price_per_gb
+        slack = np.maximum(total - self.deadline_s, 0.0)
+        return np.stack([total, energy, price, slack], axis=-1)
+
+    def scalarize(self, components: np.ndarray) -> np.ndarray:
+        return scalarize_weighted(components, self.objectives, self.weights)
+
+    def latency_parts(self, layers, envs):
+        return self.base.latency_parts(layers, envs)
+
+    def pareto(self, layers, envs) -> np.ndarray:
+        """``[E, L+1]`` mask of Pareto-optimal splits per environment."""
+        return pareto_front(self.components(layers, envs))
+
+
+def _tdp_or_zero(tdp: Optional[np.ndarray], n: int) -> np.ndarray:
+    if tdp is None:
+        return np.zeros(n)
+    return np.asarray(tdp, np.float64)
+
+
+# --------------------------------------------------------------------------
+# Cost-model-driven ETC matrices for the scheduler
+# --------------------------------------------------------------------------
+def etc_from_cost(cost: CostModel, tasks, nodes) -> np.ndarray:
+    """``[T, N]`` scalarised cost of running each task wholly on each node.
+
+    Each task becomes a one-layer chain evaluated at split 0 — the task
+    ships its input over the node's link and executes remotely — which for
+    :class:`AnalyticCost` reproduces ``Node.exec_time`` exactly.  Cost
+    models exposing a ``task_matrix`` fast path (:class:`PredictorCost`)
+    are dispatched to it instead.
+    """
+    fast = getattr(cost, "task_matrix", None)
+    if fast is not None:
+        return fast(tasks, nodes)
+    specs = [n.spec for n in nodes]
+    link = np.asarray([s.link_bw for s in specs], np.float64)
+    out = np.empty((len(tasks), len(specs)))
+    for i, t in enumerate(tasks):
+        layers = [LayerCost(t.name, flops=t.flops, act_bytes=0.0)]
+        envs = make_envs(specs, specs, link_bw=link, link_latency_s=0.0,
+                         input_bytes=t.input_bytes)
+        out[i] = cost.scalarize(cost.components(layers, envs))[:, 0]
+    return out

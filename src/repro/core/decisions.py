@@ -9,8 +9,17 @@ argmin every row.  One call replaces ``n_envs × (L+1)`` scalar
 ``split_time`` evaluations, which is what makes scenario sweeps (link
 grids × device mixes × models) and high-rate decision serving tractable.
 
+*What* is being minimised is pluggable: every decision entry point takes a
+``cost=`` :class:`repro.core.costs.CostModel` mapping ``(layers, envs)``
+to a ``[n_envs, L+1, n_objectives]`` component tensor — analytic roofline
+latency (the default), latency predicted by the trained profiling model
+(``PredictorCost``), or multi-objective latency/energy/price/deadline
+stacks (``CompositeCost``).  Without ``cost=`` the historical analytic
+latency-only behaviour is preserved bit-for-bit.
+
 Usage::
 
+    from repro.core import costs as co
     from repro.core import decisions as dec
     from repro.core import offload as off
     from repro.hw import get_device
@@ -20,19 +29,28 @@ Usage::
                          get_device("edge-server-a100"),
                          link_bw=np.geomspace(1e5, 1e10, 4096),
                          input_bytes=4 * 32 * 784)
-    lat = dec.latency_matrix(layers, envs)      # [4096, L+1]
-    plan = dec.decide_all(layers, envs)         # argmin per env
+    plan = dec.decide_all(layers, envs)         # analytic, latency-only
     plan.splits, plan.total_time_s              # [4096] each
     plan[0]                                     # -> offload.SplitDecision
 
+    cost = co.CompositeCost(weights={"latency_s": 1, "energy_j": 0.05})
+    plan = dec.decide_all(layers, envs, cost=cost)
+    plan.objective("energy_j")                  # [4096] joules at the split
+    co.pareto_front(cost.components(layers, envs))   # [4096, L+1] mask
+
+    gbt = MultiTargetGBT().fit(x, y)            # trained profiling model
+    plan = dec.decide_all(layers, envs,
+                          cost=co.PredictorCost(gbt, device, edge))
+
 Scalar oracles for every path here live in ``repro.core.offload``
 (``split_time`` / ``optimal_split_ref``); the equivalence tests in
-``tests/test_decisions.py`` pin this module to them.
+``tests/test_decisions.py`` and ``tests/test_costs.py`` pin this module
+and the cost models to them.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Union
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
@@ -49,15 +67,19 @@ class EnvArrays:
     link_bw: np.ndarray              # [E] bytes/s
     link_latency_s: np.ndarray       # [E]
     input_bytes: np.ndarray          # [E]
+    # board power, for the energy objective (None when built by hand from
+    # raw arrays; make_envs/stack_envs always fill them from the specs)
+    dev_tdp_watts: Optional[np.ndarray] = None      # [E]
+    edge_tdp_watts: Optional[np.ndarray] = None     # [E]
 
     def __len__(self) -> int:
         return self.dev_flops.shape[0]
 
 
-def _spec_flops(spec) -> Union[float, np.ndarray]:
+def _spec_attr(spec, attr: str) -> Union[float, np.ndarray]:
     if isinstance(spec, DeviceSpec):
-        return spec.peak_flops_f32
-    return np.asarray([s.peak_flops_f32 for s in spec], np.float64)
+        return getattr(spec, attr)
+    return np.asarray([getattr(s, attr) for s in spec], np.float64)
 
 
 def make_envs(device, edge, link_bw,
@@ -66,11 +88,17 @@ def make_envs(device, edge, link_bw,
     :class:`EnvArrays`.  ``device``/``edge`` may be a single
     :class:`DeviceSpec` or a sequence of them."""
     arrs = np.broadcast_arrays(
-        np.atleast_1d(np.asarray(_spec_flops(device), np.float64)),
-        np.atleast_1d(np.asarray(_spec_flops(edge), np.float64)),
+        np.atleast_1d(np.asarray(_spec_attr(device, "peak_flops_f32"),
+                                 np.float64)),
+        np.atleast_1d(np.asarray(_spec_attr(edge, "peak_flops_f32"),
+                                 np.float64)),
         np.atleast_1d(np.asarray(link_bw, np.float64)),
         np.atleast_1d(np.asarray(link_latency_s, np.float64)),
-        np.atleast_1d(np.asarray(input_bytes, np.float64)))
+        np.atleast_1d(np.asarray(input_bytes, np.float64)),
+        np.atleast_1d(np.asarray(_spec_attr(device, "tdp_watts"),
+                                 np.float64)),
+        np.atleast_1d(np.asarray(_spec_attr(edge, "tdp_watts"),
+                                 np.float64)))
     return EnvArrays(*arrs)
 
 
@@ -81,7 +109,33 @@ def stack_envs(envs: Sequence[OffloadEnv]) -> EnvArrays:
         np.asarray([e.edge.peak_flops_f32 for e in envs], np.float64),
         np.asarray([e.link_bw for e in envs], np.float64),
         np.asarray([e.link_latency_s for e in envs], np.float64),
-        np.asarray([e.input_bytes for e in envs], np.float64))
+        np.asarray([e.input_bytes for e in envs], np.float64),
+        np.asarray([e.device.tdp_watts for e in envs], np.float64),
+        np.asarray([e.edge.tdp_watts for e in envs], np.float64))
+
+
+def transfer_bytes(layers: Sequence[LayerCost], envs: EnvArrays
+                   ) -> np.ndarray:
+    """Bytes crossing the link per split, ``[E, L+1]`` (0 at split == L):
+    the raw input at split 0, the split layer's activation otherwise."""
+    n = len(envs)
+    act = np.fromiter((lc.act_bytes for lc in layers), np.float64,
+                      count=len(layers))
+    out = np.concatenate(
+        [envs.input_bytes[:, None],
+         np.broadcast_to(act[None, :], (n, len(layers)))], axis=1)
+    out[:, -1] = 0.0                 # split == L ships nothing
+    return out
+
+
+def transfer_matrix(layers: Sequence[LayerCost], envs: EnvArrays
+                    ) -> np.ndarray:
+    """Transfer latency per split, ``[E, L+1]``: link latency plus shipped
+    bytes over bandwidth (0 at split == L)."""
+    xfer = envs.link_latency_s[:, None] + transfer_bytes(layers, envs) \
+        / np.maximum(envs.link_bw, 1.0)[:, None]
+    xfer[:, -1] = 0.0                # split == L ships nothing
+    return xfer
 
 
 def latency_components(layers: Sequence[LayerCost], envs: EnvArrays,
@@ -96,21 +150,13 @@ def latency_components(layers: Sequence[LayerCost], envs: EnvArrays,
     n = len(envs)
     flops = np.fromiter((lc.flops for lc in layers), np.float64,
                         count=len(layers))
-    act = np.fromiter((lc.act_bytes for lc in layers), np.float64,
-                      count=len(layers))
     t_dev = flops[None, :] / (envs.dev_flops[:, None] * efficiency)
     t_edge = flops[None, :] / (envs.edge_flops[:, None] * efficiency)
     zero = np.zeros((n, 1))
     dev_cum = np.concatenate([zero, np.cumsum(t_dev, axis=1)], axis=1)
     edge_cum = np.concatenate(
         [np.cumsum(t_edge[:, ::-1], axis=1)[:, ::-1], zero], axis=1)
-    xfer_bytes = np.concatenate(
-        [envs.input_bytes[:, None],
-         np.broadcast_to(act[None, :], (n, len(layers)))], axis=1)
-    xfer = envs.link_latency_s[:, None] \
-        + xfer_bytes / np.maximum(envs.link_bw, 1.0)[:, None]
-    xfer[:, -1] = 0.0                # split == L ships nothing
-    return dev_cum, xfer, edge_cum
+    return dev_cum, transfer_matrix(layers, envs), edge_cum
 
 
 def latency_matrix(layers: Sequence[LayerCost], envs: EnvArrays,
@@ -121,13 +167,22 @@ def latency_matrix(layers: Sequence[LayerCost], envs: EnvArrays,
 
 
 @dataclasses.dataclass(frozen=True)
-class BatchDecisions:
-    """Per-environment optimal decisions, struct-of-arrays (all ``[E]``)."""
+class DecisionPlan:
+    """Per-environment optimal decisions, struct-of-arrays (all ``[E]``).
+
+    With a multi-objective cost model, ``objectives``/``components`` carry
+    the named per-objective cost at each chosen split and ``scalar_cost``
+    the scalarised value the argmin ranked by; latency-only plans leave
+    them at their defaults.
+    """
     splits: np.ndarray
     total_time_s: np.ndarray
     device_time_s: np.ndarray
     transfer_time_s: np.ndarray
     edge_time_s: np.ndarray
+    objectives: tuple[str, ...] = ("latency_s",)
+    components: Optional[np.ndarray] = None       # [E, n_objectives]
+    scalar_cost: Optional[np.ndarray] = None      # [E]
 
     def __len__(self) -> int:
         return self.splits.shape[0]
@@ -139,24 +194,72 @@ class BatchDecisions:
                              float(self.transfer_time_s[i]),
                              float(self.edge_time_s[i]))
 
+    def objective(self, name: str) -> np.ndarray:
+        """``[E]`` cost of the named objective at each chosen split."""
+        if self.components is None:
+            if name == "latency_s":
+                return self.total_time_s
+            raise KeyError(f"plan carries no components for {name!r}")
+        return self.components[:, self.objectives.index(name)]
+
+
+# the pre-CostModel name, kept for existing callers
+BatchDecisions = DecisionPlan
+
 
 def decide_all(layers: Sequence[LayerCost], envs: EnvArrays,
-               efficiency: float = EFFICIENCY) -> BatchDecisions:
-    """Optimal split per environment: one argmin over the latency matrix."""
-    dev_cum, xfer, edge_cum = latency_components(layers, envs, efficiency)
-    total = dev_cum + xfer + edge_cum
-    s = np.argmin(total, axis=1)
-    rows = np.arange(len(envs))
-    return BatchDecisions(s, total[rows, s], dev_cum[rows, s],
-                          xfer[rows, s], edge_cum[rows, s])
+               efficiency: float = EFFICIENCY, *,
+               cost=None) -> DecisionPlan:
+    """Optimal split per environment: one argmin over the cost matrix.
+
+    ``cost`` is a :class:`repro.core.costs.CostModel`; ``None`` keeps the
+    historical analytic latency-only path (identical to
+    ``cost=AnalyticCost(efficiency)`` but without building components).
+    The argmin ranks splits by ``cost.scalarize(components)``.
+    ``efficiency`` only applies to the analytic default — with ``cost=``
+    the model owns its parameters, so combining the two is rejected
+    rather than silently ignoring one.
+    """
+    if cost is not None and efficiency != EFFICIENCY:
+        raise ValueError(
+            "efficiency= is ignored when cost= is given; set it on the "
+            "cost model instead (e.g. AnalyticCost(efficiency=...))")
+    if cost is None:
+        dev_cum, xfer, edge_cum = latency_components(layers, envs,
+                                                     efficiency)
+        total = dev_cum + xfer + edge_cum
+        s = np.argmin(total, axis=1)
+        rows = np.arange(len(envs))
+        return DecisionPlan(s, total[rows, s], dev_cum[rows, s],
+                            xfer[rows, s], edge_cum[rows, s])
+    comp = np.asarray(cost.components(layers, envs), np.float64)
+    scalar = cost.scalarize(comp)
+    s = np.argmin(scalar, axis=1)
+    rows = np.arange(comp.shape[0])
+    objectives = tuple(cost.objectives)
+    comp_s = comp[rows, s]
+    if "latency_s" in objectives:
+        total = comp_s[:, objectives.index("latency_s")]
+    else:
+        total = scalar[rows, s]
+    parts_fn = getattr(cost, "latency_parts", None)
+    if parts_fn is not None:
+        dev_cum, xfer, edge_cum = parts_fn(layers, envs)
+        dev_t, xfer_t, edge_t = (dev_cum[rows, s], xfer[rows, s],
+                                 edge_cum[rows, s])
+    else:                            # no latency decomposition available
+        dev_t = xfer_t = edge_t = np.full(len(rows), np.nan)
+    return DecisionPlan(s, total, dev_t, xfer_t, edge_t,
+                        objectives=objectives, components=comp_s,
+                        scalar_cost=scalar[rows, s])
 
 
 def sweep_links(layers: Sequence[LayerCost], env_base: OffloadEnv,
-                link_bws) -> BatchDecisions:
+                link_bws, *, cost=None) -> DecisionPlan:
     """Optimal decisions for one device/edge pair across a bandwidth grid —
     the common "radio conditions sweep" shorthand."""
     envs = make_envs(env_base.device, env_base.edge,
                      link_bw=np.asarray(link_bws, np.float64),
                      link_latency_s=env_base.link_latency_s,
                      input_bytes=env_base.input_bytes)
-    return decide_all(layers, envs)
+    return decide_all(layers, envs, cost=cost)

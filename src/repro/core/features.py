@@ -23,7 +23,7 @@ FEATURE_NAMES = [
     "log_dataset_size",
     # hardware
     "log_hw_peak_flops", "log_hw_hbm_bw", "log_hw_link_bw", "hw_clock_ghz",
-    "hw_is_accelerated",
+    "hw_is_accelerated", "hw_tdp_watts",
 ]
 
 TARGET_NAMES = ["flops", "macs", "total_time"]
@@ -55,6 +55,7 @@ def featurize(rec: ProfileRecord) -> np.ndarray:
         float(np.log10(max(hw["hw_link_bw"], 1.0))),
         float(hw["hw_clock_ghz"]),
         float(hw["hw_is_accelerated"]),
+        float(hw.get("hw_tdp_watts", 0.0)),   # absent in pre-energy records
     ]
     return np.asarray(feats, np.float32)
 

@@ -18,6 +18,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.core.offload import DEFAULT_EFFICIENCY
 from repro.hw import DeviceSpec
 
 
@@ -35,7 +36,8 @@ class Node:
     spec: DeviceSpec
     available_at: float = 0.0    # infrastructure monitoring: busy-until
 
-    def exec_time(self, task: Task, efficiency: float = 0.35) -> float:
+    def exec_time(self, task: Task,
+                  efficiency: float = DEFAULT_EFFICIENCY) -> float:
         comp = task.flops / (self.spec.peak_flops_f32 * efficiency)
         xfer = task.input_bytes / max(self.spec.link_bw, 1.0)
         return comp + xfer
@@ -69,14 +71,21 @@ class Schedule:
 
 
 def etc_matrix(tasks: Sequence[Task], nodes: Sequence[Node],
-               predictor: Optional[Callable[[Task, Node], float]] = None
-               ) -> np.ndarray:
+               predictor: Optional[Callable[[Task, Node], float]] = None,
+               *, cost=None) -> np.ndarray:
     """Expected-time-to-compute matrix [T, N].
 
-    ``predictor`` plugs in the trained profiling model (paper §II-D:
-    "resource and time prediction using global profiling models"); default
-    is the analytic roofline estimate.
+    ``cost`` plugs in a :class:`repro.core.costs.CostModel`: each task is
+    costed as running wholly on each node (``PredictorCost`` batches all
+    (task, node) pairs into one ``predict`` call; ``CompositeCost`` yields
+    a scalarised multi-objective ETC).  ``predictor`` is the older scalar
+    hook — a ``(task, node) -> seconds`` callable (paper §II-D: "resource
+    and time prediction using global profiling models").  Default is the
+    analytic roofline estimate.
     """
+    if cost is not None:
+        from repro.core.costs import etc_from_cost
+        return etc_from_cost(cost, tasks, nodes)
     fn = predictor or (lambda t, n: n.exec_time(t))
     return np.array([[fn(t, n) for n in nodes] for t in tasks])
 

@@ -39,6 +39,7 @@ class DeviceSpec:
             "hw_clock_ghz": self.clock_ghz,
             "hw_mem_bytes": self.hbm_bytes,
             "hw_is_accelerated": 1.0 if self.kind in ("tpu", "gpu") else 0.0,
+            "hw_tdp_watts": self.tdp_watts,
         }
 
 

@@ -8,6 +8,13 @@ shared cache; per-slot position masking handles ragged sequence states.
 
 Works with every cache family exposing per-slot batch rows (GQA k/v, MLA
 latents, SSM/xLSTM states): splicing is a pure tree_map over the batch dim.
+
+When constructed with a cost model, the engine also closes the paper's
+offloading loop per admitted request: at admission it observes the current
+link bandwidth and re-plans the device/edge split for that request through
+:func:`repro.core.decisions.decide_all` (mirroring
+``ServeEngine.offload_plan``, but continuous — every admission re-plans
+against fresh link state instead of one plan per static batch).
 """
 from __future__ import annotations
 
@@ -36,10 +43,17 @@ def _batch_dim_index(path_leafname: str) -> Optional[int]:
 
 
 class ContinuousBatchEngine:
-    """Slot-based continuous batching for one model."""
+    """Slot-based continuous batching for one model.
+
+    ``cost`` is an optional :class:`repro.core.costs.CostModel`; when set,
+    every admitted request gets an offload split re-planned against the
+    current ``link_bw`` observation (a float, or a zero-arg callable
+    returning the observed bytes/s) and recorded on ``request.offload``.
+    """
 
     def __init__(self, cfg, *, slots: int = 4, max_len: int = 256,
-                 seed: int = 0):
+                 seed: int = 0, cost=None, link_bw=1.25e9,
+                 offload_device=None, offload_edge=None):
         assert cfg.family in ("dense", "moe", "vlm") \
             and cfg.attn_kind == "gqa", \
             "continuous batching requires the vector-position GQA decode path"
@@ -47,6 +61,11 @@ class ContinuousBatchEngine:
         self.api = build_model(cfg, impl="naive")
         self.slots = slots
         self.max_len = max_len
+        self.cost = cost
+        self.link_bw = link_bw           # float or () -> float observation
+        self.offload_device = offload_device
+        self.offload_edge = offload_edge
+        self.replans = 0
         self.params = self.api.init_params(jax.random.key(seed))
         self.cache = self.api.init_cache(slots, max_len)
         # per-slot state (host side)
@@ -77,8 +96,32 @@ class ContinuousBatchEngine:
             out.append(big.at[tuple(idx)].set(small))
         self.cache = jax.tree_util.tree_unflatten(treedef, out)
 
+    # -- offload re-planning --------------------------------------------------
+    def observe_link_bw(self) -> float:
+        """Current link-bandwidth observation (bytes/s)."""
+        bw = self.link_bw() if callable(self.link_bw) else self.link_bw
+        return float(bw)
+
+    def _plan_offload(self, req: Request) -> None:
+        """Re-plan the device/edge split for one admitted request against
+        the engine's cost model and the fresh link observation."""
+        from repro.core.decisions import decide_all, make_envs
+        from repro.core.offload import transformer_layer_costs
+        from repro.hw import get_device
+        device = self.offload_device or get_device("jetson-orin-nano")
+        edge = self.offload_edge or get_device("edge-server-a100")
+        seq = max(len(req.prompt), 1)
+        layers = transformer_layer_costs(self.cfg, seq, 1)
+        envs = make_envs(device, edge,
+                         link_bw=np.asarray([self.observe_link_bw()]),
+                         input_bytes=4.0 * seq)
+        req.offload = decide_all(layers, envs, cost=self.cost)[0]
+        self.replans += 1
+
     # -- admission ------------------------------------------------------------
     def _admit(self, req: Request, slot: int):
+        if self.cost is not None:
+            self._plan_offload(req)
         batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
         logits, cache1 = self._prefill1(self.params, batch)
         self._splice(slot, cache1)

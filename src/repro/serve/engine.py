@@ -31,6 +31,10 @@ class Request:
     output: Optional[np.ndarray] = None
     first_token_s: float = 0.0
     total_s: float = 0.0
+    # repro.core.offload.SplitDecision, filled at admission by
+    # ContinuousBatchEngine when it carries a cost model (ServeEngine
+    # plans per batch via offload_plan instead of per request)
+    offload: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -46,14 +50,21 @@ class EngineStats:
 
 
 class ServeEngine:
-    """Static-batch serving for one model."""
+    """Static-batch serving for one model.
+
+    ``cost`` is an optional :class:`repro.core.costs.CostModel`; when set
+    it becomes the default cost model for :meth:`offload_plan`, so one
+    engine can plan against analytic, predictor-driven, or multi-objective
+    costs without per-call plumbing.
+    """
 
     def __init__(self, cfg, *, batch_size: int = 4, max_len: int = 256,
-                 seed: int = 0):
+                 seed: int = 0, cost=None):
         self.cfg = cfg
         self.api = build_model(cfg, impl="naive")
         self.batch_size = batch_size
         self.max_len = max_len
+        self.cost = cost
         self.params = self.api.init_params(jax.random.key(seed))
         self._prefill = jax.jit(
             lambda p, b: self.api.prefill(p, b, max_len))
@@ -147,13 +158,16 @@ class ServeEngine:
 
     # -- offload delegation -------------------------------------------------
     def offload_plan(self, link_bws, *, device=None, edge=None,
-                     seq_len: int = 0, link_latency_s: float = 0.005):
+                     seq_len: int = 0, link_latency_s: float = 0.005,
+                     cost=None):
         """Split-computing plan for this model across candidate link states.
 
         Delegates to the vectorized decision core: one ``[n_links, L+1]``
-        latency matrix and one argmin per link, so the broker can re-plan
-        every batch without measurable overhead.  Returns a
-        :class:`repro.core.decisions.BatchDecisions`; index it to get the
+        cost matrix and one argmin per link, so the broker can re-plan
+        every batch without measurable overhead.  ``cost`` overrides the
+        engine's construction-time cost model (``None`` falls back to it,
+        then to the analytic latency model).  Returns a
+        :class:`repro.core.decisions.DecisionPlan`; index it to get the
         ``SplitDecision`` for one link state.
         """
         from repro.core.decisions import decide_all, make_envs
@@ -167,4 +181,5 @@ class ServeEngine:
                          link_bw=np.atleast_1d(link_bws).astype(np.float64),
                          link_latency_s=link_latency_s,
                          input_bytes=4.0 * self.batch_size * seq_len)
-        return decide_all(layers, envs)
+        return decide_all(layers, envs,
+                          cost=cost if cost is not None else self.cost)

@@ -1,0 +1,353 @@
+"""CostModel API tests: AnalyticCost pinned bit-for-bit to the latency
+matrix, PredictorCost pinned to per-env scalar predictions, CompositeCost
+objective semantics, cost-driven ETC matrices, and hypothesis property
+tests for ``pareto_front`` (non-domination; a positively-weighted
+scalarised argmin is always on the front)."""
+import dataclasses
+import inspect
+
+import numpy as np
+import pytest
+from hypothesis_shim import given, settings, st
+
+from repro.core import costs as co
+from repro.core import decisions as dec
+from repro.core import offload as off
+from repro.core import scheduler as sch
+from repro.core.predictors import GBTRegressor
+from repro.hw import ALL_DEVICES, EDGE_DEVICES, get_device
+
+
+def rand_layers(rng, n):
+    return [off.LayerCost(f"l{i}",
+                          flops=float(rng.uniform(1e6, 1e12)),
+                          act_bytes=float(rng.uniform(1e2, 1e8)))
+            for i in range(n)]
+
+
+def grid_envs(n=32, device="pi5-arm", edge="edge-server-a100"):
+    return dec.make_envs(get_device(device), get_device(edge),
+                         link_bw=np.geomspace(1e4, 1e10, n),
+                         input_bytes=4 * 32 * 784)
+
+
+@pytest.fixture(scope="module")
+def fitted_gbt():
+    """Small profiling GBT over (layer, hardware) features → layer time."""
+    rng = np.random.default_rng(0)
+    layers = rand_layers(rng, 24)
+    feats, ys = [], []
+    for spec in EDGE_DEVICES.values():
+        feats.append(co.default_layer_features(layers, spec))
+        ys.append([off.layer_time(lc.flops, spec) for lc in layers])
+    return GBTRegressor(n_trees=30, max_depth=4).fit(
+        np.concatenate(feats), np.concatenate(ys))
+
+
+# --------------------------------------------------------------------------
+# AnalyticCost: bit-for-bit the latency matrix / historical decide_all
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("trial", range(5))
+def test_analytic_cost_bit_for_bit(trial):
+    rng = np.random.default_rng(trial)
+    layers = rand_layers(rng, int(rng.integers(1, 20)))
+    envs = grid_envs(16)
+    comp = co.AnalyticCost().components(layers, envs)
+    assert comp.shape == (16, len(layers) + 1, 1)
+    assert np.array_equal(comp[..., 0], dec.latency_matrix(layers, envs))
+
+
+@pytest.mark.parametrize("trial", range(5))
+def test_decide_all_with_analytic_cost_matches_default(trial):
+    rng = np.random.default_rng(100 + trial)
+    layers = rand_layers(rng, int(rng.integers(1, 20)))
+    envs = grid_envs(16)
+    base = dec.decide_all(layers, envs)
+    via_cost = dec.decide_all(layers, envs, cost=co.AnalyticCost())
+    for field in ("splits", "total_time_s", "device_time_s",
+                  "transfer_time_s", "edge_time_s"):
+        assert np.array_equal(getattr(base, field), getattr(via_cost, field))
+    assert via_cost.objectives == ("latency_s",)
+    assert via_cost.components.shape == (16, 1)
+    # plans without cost= keep the slim historical surface
+    assert base.objectives == ("latency_s",)
+    assert base.components is None
+    np.testing.assert_array_equal(base.objective("latency_s"),
+                                  base.total_time_s)
+
+
+def test_sweep_links_cost_passthrough():
+    rng = np.random.default_rng(1)
+    layers = rand_layers(rng, 8)
+    env = off.OffloadEnv(get_device("pi5-arm"),
+                         get_device("edge-server-a100"),
+                         link_bw=1e8, input_bytes=1e5)
+    bws = np.geomspace(1e5, 1e9, 12)
+    a = dec.sweep_links(layers, env, bws)
+    b = dec.sweep_links(layers, env, bws, cost=co.AnalyticCost())
+    assert np.array_equal(a.splits, b.splits)
+    assert np.array_equal(a.total_time_s, b.total_time_s)
+
+
+# --------------------------------------------------------------------------
+# PredictorCost: pinned to per-env scalar predictions, one predict call
+# --------------------------------------------------------------------------
+def test_predictor_cost_matches_scalar_predictions(fitted_gbt):
+    rng = np.random.default_rng(2)
+    layers = rand_layers(rng, 10)
+    device, edge = get_device("pi5-arm"), get_device("edge-server-a100")
+    envs = grid_envs(8)
+    cost = co.PredictorCost(fitted_gbt, device, edge)
+    comp = cost.components(layers, envs)
+    assert comp.shape == (8, 11, 1)
+
+    def time_fn(lc, spec):
+        one = co.default_layer_features([lc], spec)
+        return max(float(fitted_gbt.predict(one)[0]), 0.0)
+
+    for i in range(len(envs)):
+        env = off.OffloadEnv(device, edge,
+                             link_bw=float(envs.link_bw[i]),
+                             link_latency_s=float(envs.link_latency_s[i]),
+                             input_bytes=float(envs.input_bytes[i]))
+        expect = off.split_times_all(layers, env, time_fn=time_fn)
+        np.testing.assert_allclose(comp[i, :, 0], expect,
+                                   rtol=1e-9, atol=1e-12)
+
+
+def test_predictor_cost_one_predict_call_per_sweep(fitted_gbt):
+    class Counting:
+        calls = 0
+
+        def predict(self, x):
+            Counting.calls += 1
+            return fitted_gbt.predict(x)
+
+    rng = np.random.default_rng(3)
+    layers = rand_layers(rng, 12)
+    envs = grid_envs(1024)           # fleet-scale sweep, no per-env loop
+    cost = co.PredictorCost(Counting(), get_device("pi5-arm"),
+                            get_device("edge-server-a100"))
+    plan = dec.decide_all(layers, envs, cost=cost)
+    assert len(plan) == 1024
+    assert Counting.calls == 1
+    assert np.isfinite(plan.total_time_s).all()
+
+
+def test_predictor_cost_breakdown_sums_to_total(fitted_gbt):
+    rng = np.random.default_rng(4)
+    layers = rand_layers(rng, 6)
+    envs = grid_envs(5)
+    plan = dec.decide_all(layers, envs, cost=co.PredictorCost(
+        fitted_gbt, get_device("pi5-arm"), get_device("edge-server-a100")))
+    np.testing.assert_allclose(
+        plan.device_time_s + plan.transfer_time_s + plan.edge_time_s,
+        plan.total_time_s, rtol=1e-9)
+
+
+# --------------------------------------------------------------------------
+# CompositeCost: objective semantics
+# --------------------------------------------------------------------------
+def test_composite_components_semantics():
+    rng = np.random.default_rng(5)
+    layers = rand_layers(rng, 9)
+    envs = grid_envs(16)
+    cost = co.CompositeCost(price_per_edge_s=0.2, price_per_gb=0.05,
+                            deadline_s=0.01)
+    comp = cost.components(layers, envs)
+    assert comp.shape == (16, 10, 4)
+    assert cost.objectives == ("latency_s", "energy_j", "price",
+                               "deadline_slack_s")
+    lat = comp[..., 0]
+    np.testing.assert_allclose(lat, dec.latency_matrix(layers, envs),
+                               rtol=1e-12)
+    # energy must not silently be zero: specs carry tdp_watts
+    assert (comp[..., 1] > 0).all()
+    np.testing.assert_allclose(comp[..., 3],
+                               np.maximum(lat - 0.01, 0.0), rtol=1e-12)
+    # local-only split ships nothing -> zero transfer price, and with a
+    # zero-cost edge column the price must be exactly 0
+    free_edge = co.CompositeCost(price_per_edge_s=0.0, price_per_gb=1.0)
+    comp2 = free_edge.components(layers, envs)
+    np.testing.assert_array_equal(comp2[:, -1, 2], np.zeros(16))
+
+
+def test_composite_scalarisation_weights():
+    rng = np.random.default_rng(6)
+    layers = rand_layers(rng, 7)
+    envs = grid_envs(8)
+    latency_only = co.CompositeCost(weights={"latency_s": 1.0})
+    plan = dec.decide_all(layers, envs, cost=latency_only)
+    base = dec.decide_all(layers, envs)
+    assert np.array_equal(plan.splits, base.splits)
+    # an enormous energy weight must not pick strictly dominated splits
+    energy_heavy = co.CompositeCost(weights={"energy_j": 1.0})
+    plan_e = dec.decide_all(layers, envs, cost=energy_heavy)
+    comp = energy_heavy.components(layers, envs)
+    rows = np.arange(len(envs))
+    assert np.array_equal(plan_e.scalar_cost,
+                          comp[rows, plan_e.splits, 1])
+    np.testing.assert_array_equal(plan_e.objective("energy_j"),
+                                  comp[rows, plan_e.splits, 1])
+
+
+def test_decide_all_rejects_efficiency_with_cost():
+    """efficiency= belongs to the analytic default; with cost= it would be
+    silently ignored, so the combination must raise."""
+    rng = np.random.default_rng(12)
+    layers = rand_layers(rng, 4)
+    envs = grid_envs(3)
+    with pytest.raises(ValueError, match="efficiency"):
+        dec.decide_all(layers, envs, 0.5, cost=co.AnalyticCost())
+    # an explicit matching cost-model efficiency is the supported spelling
+    plan = dec.decide_all(layers, envs, cost=co.AnalyticCost(0.5))
+    base = dec.decide_all(layers, envs, 0.5)
+    assert np.array_equal(plan.splits, base.splits)
+
+
+def test_composite_requires_latency_parts_base():
+    class TotalsOnly:
+        objectives = ("latency_s",)
+
+        def components(self, layers, envs):
+            return np.zeros((len(envs), len(layers) + 1, 1))
+
+        def scalarize(self, comp):
+            return comp[..., 0]
+
+    with pytest.raises(TypeError, match="latency_parts"):
+        co.CompositeCost(base=TotalsOnly())
+
+
+def test_composite_rejects_unknown_weight_names():
+    rng = np.random.default_rng(10)
+    layers = rand_layers(rng, 4)
+    envs = grid_envs(3)
+    cost = co.CompositeCost(weights={"energy": 1.0})   # typo: energy_j
+    with pytest.raises(KeyError, match="energy"):
+        dec.decide_all(layers, envs, cost=cost)
+
+
+def test_envs_carry_tdp_watts():
+    envs = grid_envs(4, device="pi5-arm", edge="edge-server-a100")
+    assert np.all(envs.dev_tdp_watts == get_device("pi5-arm").tdp_watts)
+    assert np.all(envs.edge_tdp_watts
+                  == get_device("edge-server-a100").tdp_watts)
+    listed = dec.stack_envs([off.OffloadEnv(
+        get_device("xps15-i5"), get_device("gtx-1650"), link_bw=1e8)])
+    assert listed.dev_tdp_watts[0] == get_device("xps15-i5").tdp_watts
+
+
+def test_all_specs_expose_positive_tdp_feature():
+    for spec in ALL_DEVICES.values():
+        feats = spec.as_features()
+        assert feats["hw_tdp_watts"] == spec.tdp_watts > 0, spec.name
+
+
+# --------------------------------------------------------------------------
+# Cost-driven ETC matrices + efficiency threading
+# --------------------------------------------------------------------------
+def rand_cluster(rng, n_tasks=8):
+    nodes = [sch.Node(s) for s in EDGE_DEVICES.values()]
+    tasks = [sch.Task(f"t{i}", flops=float(rng.uniform(1e9, 5e11)),
+                      input_bytes=float(rng.uniform(1e4, 1e7)))
+             for i in range(n_tasks)]
+    return tasks, nodes
+
+
+def test_etc_matrix_analytic_cost_matches_exec_time():
+    rng = np.random.default_rng(7)
+    tasks, nodes = rand_cluster(rng)
+    base = sch.etc_matrix(tasks, nodes)
+    via_cost = sch.etc_matrix(tasks, nodes, cost=co.AnalyticCost())
+    assert np.array_equal(base, via_cost)
+
+
+def test_etc_matrix_predictor_cost_vectorised(fitted_gbt):
+    class Counting:
+        calls = 0
+
+        def predict(self, x):
+            Counting.calls += 1
+            return fitted_gbt.predict(x)
+
+    rng = np.random.default_rng(8)
+    tasks, nodes = rand_cluster(rng, n_tasks=12)
+    cost = co.PredictorCost(Counting(), get_device("pi5-arm"),
+                            get_device("edge-server-a100"))
+    etc = sch.etc_matrix(tasks, nodes, cost=cost)
+    assert etc.shape == (12, len(nodes))
+    assert Counting.calls == 1            # all (task, node) pairs batched
+    assert (etc > 0).all()
+    # schedulers consume it unchanged
+    s = sch.min_min(tasks, nodes, etc)
+    assert len(s.assignments) == len(tasks)
+
+
+def test_node_exec_time_default_efficiency_is_shared():
+    sig = inspect.signature(sch.Node.exec_time)
+    assert sig.parameters["efficiency"].default is off.DEFAULT_EFFICIENCY
+    node = sch.Node(get_device("pi5-arm"))
+    task = sch.Task("t", flops=1e10, input_bytes=1e5)
+    expect = (task.flops
+              / (node.spec.peak_flops_f32 * off.DEFAULT_EFFICIENCY)
+              + task.input_bytes / max(node.spec.link_bw, 1.0))
+    assert node.exec_time(task) == expect
+
+
+# --------------------------------------------------------------------------
+# pareto_front property tests
+# --------------------------------------------------------------------------
+def _dominates(a, b):
+    return bool(np.all(a <= b) and np.any(a < b))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 24), st.integers(1, 4))
+def test_pareto_front_non_domination(seed, n, k):
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(0.0, 1.0, (n, k))
+    front = co.pareto_front(c)
+    assert front.shape == (n,) and front.any()
+    on = np.flatnonzero(front)
+    for i in on:                          # nothing dominates a front point
+        for j in range(n):
+            assert not _dominates(c[j], c[i])
+    for i in np.flatnonzero(~front):      # every excluded point is dominated
+        assert any(_dominates(c[j], c[i]) for j in range(n))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 24), st.integers(1, 4))
+def test_pareto_scalarised_argmin_on_front(seed, n, k):
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(0.0, 1.0, (n, k))
+    w = rng.uniform(0.1, 10.0, k)         # strictly positive weights
+    best = int(np.argmin(c @ w))
+    assert co.pareto_front(c)[best]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6), st.integers(1, 9),
+       st.integers(1, 3))
+def test_pareto_front_batched_matches_per_row(seed, e, s, k):
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(0.0, 1.0, (e, s, k))
+    batched = co.pareto_front(c)
+    assert batched.shape == (e, s)
+    for i in range(e):
+        np.testing.assert_array_equal(batched[i], co.pareto_front(c[i]))
+
+
+def test_pareto_front_on_decision_matrix():
+    """The scalarised decide_all split is Pareto-optimal per environment."""
+    rng = np.random.default_rng(9)
+    layers = rand_layers(rng, 10)
+    envs = grid_envs(32)
+    cost = co.CompositeCost(weights={"latency_s": 1.0, "energy_j": 0.01,
+                                     "price": 0.5},
+                            price_per_edge_s=0.1, price_per_gb=0.01)
+    front = cost.pareto(layers, envs)
+    plan = dec.decide_all(layers, envs, cost=cost)
+    rows = np.arange(len(envs))
+    assert front[rows, plan.splits].all()

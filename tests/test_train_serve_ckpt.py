@@ -105,3 +105,39 @@ def test_continuous_batching_matches_static():
         out_ref = ref_engine.generate_batch(
             r.prompt[None], r.max_new_tokens)
         np.testing.assert_array_equal(r.output, out_ref[0])
+
+
+def test_continuous_engine_replans_offload_per_admission():
+    """With a cost model, every admitted request gets a fresh offload split
+    planned against the link observation at admission time."""
+    from repro.core.costs import AnalyticCost
+    from repro.core.decisions import decide_all, make_envs
+    from repro.core.offload import transformer_layer_costs
+    from repro.hw import get_device
+    from repro.serve.continuous import ContinuousBatchEngine
+    cfg = reduced_config("qwen3-1.7b").replace(dtype="float32")
+    # link degrades between admissions: first requests see wired, later
+    # ones a congested cell link
+    observations = iter([1.25e9, 1.25e9, 0.125e9 / 64, 0.125e9 / 64])
+    eng = ContinuousBatchEngine(cfg, slots=2, max_len=48, seed=3,
+                                cost=AnalyticCost(),
+                                link_bw=lambda: next(observations))
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in (5, 9, 7, 12)]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=3, arrived_at=i * 0.01)
+            for i, p in enumerate(prompts)]
+    done = eng.serve(reqs)
+    assert len(done) == 4 and eng.replans == 4
+    device, edge = get_device("jetson-orin-nano"), \
+        get_device("edge-server-a100")
+    for r, bw in zip(sorted(done, key=lambda r: r.rid),
+                     [1.25e9, 1.25e9, 0.125e9 / 64, 0.125e9 / 64]):
+        assert r.offload is not None
+        layers = transformer_layer_costs(cfg, len(r.prompt), 1)
+        envs = make_envs(device, edge, link_bw=np.asarray([bw]),
+                         input_bytes=4.0 * len(r.prompt))
+        expect = decide_all(layers, envs, cost=AnalyticCost())[0]
+        assert r.offload.split == expect.split
+        np.testing.assert_allclose(r.offload.total_time_s,
+                                   expect.total_time_s, rtol=1e-12)
