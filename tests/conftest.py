@@ -1,0 +1,24 @@
+"""Shared test configuration: hypothesis speed profiles.
+
+The full tier-1 suite (``pytest -x -q``) keeps hypothesis defaults.  The
+fast lane trims property tests to a smoke-sized number of examples::
+
+    HYPOTHESIS_PROFILE=fast pytest -q -m "not slow"
+
+which together with the ``slow`` markers (see pytest.ini) brings the
+suite from ~10 minutes to a few minutes on CPU — the pre-push loop and
+the CI ``fast`` job.  ``HYPOTHESIS_PROFILE=full`` (the default) is the
+release gate.
+"""
+import os
+
+from hypothesis_shim import HAVE_HYPOTHESIS
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile("full", settings.default)
+    settings.register_profile(
+        "fast", max_examples=10, deadline=None,
+        suppress_health_check=list(HealthCheck))
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "full"))

@@ -10,6 +10,10 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_NAMES, reduced_config
+
+# forward/train/decode steps for all 10 architectures: several minutes on
+# CPU — excluded from the fast lane, covered by the tier-1 job
+pytestmark = pytest.mark.slow
 from repro.data.synthetic import decode_batch, prefill_batch, train_batch
 from repro.models import build_model
 

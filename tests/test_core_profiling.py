@@ -10,6 +10,10 @@ from repro.core.profiler import profile_workload
 from repro.core.workloads import (WorkloadConfig, full_grid,
                                   synthetic_image_data)
 
+# measured profiling runs + predictor fits: ~1.5 minutes on CPU —
+# excluded from the fast lane, covered by the tier-1 job
+pytestmark = pytest.mark.slow
+
 
 # --------------------------------------------------------------------------
 # workloads + profiler

@@ -1,0 +1,276 @@
+"""On-accelerator decision kernels vs the host decision core.
+
+Pins ``backend="jax"`` bit-for-bit (f64) to the numpy path — splits,
+every DecisionPlan field, and the full latency matrix — and the fused
+Pallas kernel within f32 tolerance (plus a near-optimality bound, so a
+last-ulp argmin flip at a genuine tie cannot flake the suite).  Also
+covers the degenerate shapes every backend must accept (empty layer
+chain, zero environments) and the cost models that must *not* lower.
+"""
+import numpy as np
+import pytest
+from hypothesis_shim import given, settings, st
+
+from repro.core import costs as co
+from repro.core import decisions as dec
+from repro.core import offload as off
+from repro.hw import EDGE_DEVICES, get_device
+from repro.kernels.decide_split import ops
+from repro.kernels.decide_split.ref import decide_ref, latency_matrix_ref
+
+PLAN_FIELDS = ("splits", "total_time_s", "device_time_s",
+               "transfer_time_s", "edge_time_s")
+
+
+def rand_layers(rng, n):
+    return [off.LayerCost(f"l{i}",
+                          flops=float(rng.uniform(1e6, 1e12)),
+                          act_bytes=float(rng.uniform(1e2, 1e8)))
+            for i in range(n)]
+
+
+def rand_envs(rng, n):
+    specs = list(EDGE_DEVICES.values())
+    return dec.make_envs(
+        [specs[int(rng.integers(len(specs)))] for _ in range(max(n, 1))][:n]
+        or [specs[0]],
+        specs[int(rng.integers(len(specs)))],
+        link_bw=rng.uniform(1e4, 1e10, max(n, 1))[:n],
+        link_latency_s=rng.uniform(0.0, 0.05, max(n, 1))[:n],
+        input_bytes=rng.uniform(0.0, 1e7, max(n, 1))[:n]) \
+        if n else dec.EnvArrays(*[np.zeros(0)] * 7)
+
+
+def composite():
+    return co.CompositeCost(
+        weights={"latency_s": 1.0, "energy_j": 0.05, "price": 1.0},
+        price_per_edge_s=0.1, price_per_gb=0.01, deadline_s=0.05)
+
+
+def assert_plans_equal(a, b):
+    for f in PLAN_FIELDS:
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    assert a.objectives == b.objectives
+    for f in ("components", "scalar_cost"):
+        x, y = getattr(a, f), getattr(b, f)
+        assert (x is None) == (y is None), f
+        if x is not None:
+            assert np.array_equal(x, y), f
+
+
+# --------------------------------------------------------------------------
+# jax backend: bit-for-bit with the numpy reference (f64)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("trial", range(8))
+def test_jax_decide_bit_for_bit(trial):
+    rng = np.random.default_rng(trial)
+    layers = rand_layers(rng, int(rng.integers(1, 24)))
+    envs = rand_envs(rng, int(rng.integers(1, 48)))
+    assert_plans_equal(decide_ref(layers, envs),
+                       dec.decide_all(layers, envs, backend="jax"))
+
+
+def test_jax_latency_matrix_bit_for_bit():
+    rng = np.random.default_rng(3)
+    layers = rand_layers(rng, 19)
+    envs = rand_envs(rng, 31)
+    assert np.array_equal(ops.latency_matrix_jax(layers, envs),
+                          latency_matrix_ref(layers, envs))
+
+
+def test_jax_custom_efficiency_bit_for_bit():
+    rng = np.random.default_rng(4)
+    layers = rand_layers(rng, 9)
+    envs = rand_envs(rng, 12)
+    assert_plans_equal(dec.decide_all(layers, envs, 0.71),
+                       dec.decide_all(layers, envs, 0.71, backend="jax"))
+
+
+@pytest.mark.parametrize("make_cost", [co.AnalyticCost,
+                                       lambda: co.AnalyticCost(0.5),
+                                       composite],
+                         ids=["analytic", "analytic_eff", "composite"])
+def test_jax_cost_models_bit_for_bit(make_cost):
+    rng = np.random.default_rng(5)
+    layers = rand_layers(rng, 14)
+    envs = rand_envs(rng, 20)
+    assert_plans_equal(
+        dec.decide_all(layers, envs, cost=make_cost()),
+        dec.decide_all(layers, envs, cost=make_cost(), backend="jax"))
+
+
+def test_sweep_links_backend_passthrough():
+    rng = np.random.default_rng(6)
+    layers = rand_layers(rng, 8)
+    env = off.OffloadEnv(get_device("pi5-arm"),
+                         get_device("edge-server-a100"),
+                         link_bw=1e8, input_bytes=1e5)
+    bws = np.geomspace(1e5, 1e9, 16)
+    assert_plans_equal(dec.sweep_links(layers, env, bws),
+                       dec.sweep_links(layers, env, bws, backend="jax"))
+
+
+# --------------------------------------------------------------------------
+# Pallas kernel: within f32 tolerance, chosen splits near-optimal
+# --------------------------------------------------------------------------
+def assert_pallas_close(layers, envs, *, cost=None, rtol=1e-5):
+    ref = decide_ref(layers, envs, cost=cost)
+    got = dec.decide_all(layers, envs, cost=cost, backend="pallas")
+    # the split the kernel picked, re-costed exactly in f64, must be
+    # within f32-argmin distance of the true optimum...
+    ranked_ref = ref.scalar_cost if ref.scalar_cost is not None \
+        else ref.total_time_s
+    ranked_got = got.scalar_cost if got.scalar_cost is not None \
+        else got.total_time_s
+    assert np.all(ranked_got <= ranked_ref * (1 + 1e-4) + 1e-12)
+    # ...and the plan's own breakdown must be internally consistent
+    np.testing.assert_allclose(
+        got.device_time_s + got.transfer_time_s + got.edge_time_s,
+        got.total_time_s, rtol=1e-9, atol=1e-15)
+    # on fixed seeds the argmin agrees outright
+    assert np.array_equal(ref.splits, got.splits)
+    for f in PLAN_FIELDS[1:]:
+        np.testing.assert_allclose(getattr(got, f), getattr(ref, f),
+                                   rtol=rtol, atol=1e-12, err_msg=f)
+
+
+@pytest.mark.parametrize("trial", range(4))
+def test_pallas_decide_close(trial):
+    rng = np.random.default_rng(10 + trial)
+    assert_pallas_close(rand_layers(rng, int(rng.integers(1, 40))),
+                        rand_envs(rng, int(rng.integers(1, 64))))
+
+
+def test_pallas_composite_close():
+    rng = np.random.default_rng(20)
+    layers = rand_layers(rng, 12)
+    envs = rand_envs(rng, 24)
+    assert_pallas_close(layers, envs, cost=composite())
+    ref = decide_ref(layers, envs, cost=composite())
+    got = dec.decide_all(layers, envs, cost=composite(), backend="pallas")
+    np.testing.assert_allclose(got.components, ref.components,
+                               rtol=1e-5, atol=1e-12)
+
+
+def test_pallas_multi_block_sweep():
+    """Splits beyond one 128-lane block: the running argmin must carry
+    across split blocks (and env padding must not leak into outputs)."""
+    rng = np.random.default_rng(21)
+    layers = rand_layers(rng, 300)               # 301 splits -> 3 blocks
+    envs = rand_envs(rng, 13)                    # pads to block_e
+    assert_pallas_close(layers, envs)
+
+
+# --------------------------------------------------------------------------
+# degenerate shapes: every backend, every entry point
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n_layers,n_envs", [(0, 7), (5, 0), (0, 0)])
+def test_transfer_and_latency_degenerate(n_layers, n_envs):
+    rng = np.random.default_rng(30)
+    layers = rand_layers(rng, n_layers)
+    envs = rand_envs(rng, n_envs)
+    tb = dec.transfer_bytes(layers, envs)
+    assert tb.shape == (n_envs, n_layers + 1)
+    assert np.all(tb[:, -1] == 0.0)              # split == L ships nothing
+    lat = dec.latency_matrix(layers, envs)
+    assert lat.shape == (n_envs, n_layers + 1)
+    assert np.array_equal(ops.latency_matrix_jax(layers, envs), lat)
+    if n_layers == 0 and n_envs:                 # L == 0: only split 0 == L
+        assert np.array_equal(tb, np.zeros((n_envs, 1)))
+        assert np.array_equal(lat, np.zeros((n_envs, 1)))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+@pytest.mark.parametrize("n_layers,n_envs", [(0, 7), (5, 0), (0, 0)])
+def test_decide_all_degenerate(backend, n_layers, n_envs):
+    rng = np.random.default_rng(31)
+    layers = rand_layers(rng, n_layers)
+    envs = rand_envs(rng, n_envs)
+    plan = dec.decide_all(layers, envs, backend=backend)
+    assert len(plan) == n_envs
+    assert plan.splits.shape == plan.total_time_s.shape == (n_envs,)
+    if n_layers == 0:                            # split 0 is also split L
+        assert np.all(plan.splits == 0)
+        assert np.all(plan.total_time_s == 0.0)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+@pytest.mark.parametrize("n_layers,n_envs", [(0, 4), (3, 0)])
+def test_decide_all_degenerate_composite(backend, n_layers, n_envs):
+    rng = np.random.default_rng(32)
+    plan = dec.decide_all(rand_layers(rng, n_layers),
+                          rand_envs(rng, n_envs), cost=composite(),
+                          backend=backend)
+    assert len(plan) == n_envs
+    assert plan.components.shape == (n_envs, 4)
+
+
+# --------------------------------------------------------------------------
+# lowering boundaries
+# --------------------------------------------------------------------------
+class _HostModel:
+    def predict(self, x):
+        return np.zeros(len(x))
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_predictor_cost_rejected_on_accelerator(backend):
+    rng = np.random.default_rng(40)
+    cost = co.PredictorCost(_HostModel(), get_device("pi5-arm"),
+                            get_device("edge-server-a100"))
+    with pytest.raises(TypeError, match="host-side"):
+        dec.decide_all(rand_layers(rng, 4), rand_envs(rng, 3), cost=cost,
+                       backend=backend)
+
+
+def test_composite_over_predictor_base_rejected():
+    cost = co.CompositeCost(base=co.PredictorCost(
+        _HostModel(), get_device("pi5-arm"),
+        get_device("edge-server-a100")))
+    rng = np.random.default_rng(41)
+    with pytest.raises(TypeError, match="analytic"):
+        dec.decide_all(rand_layers(rng, 4), rand_envs(rng, 3), cost=cost,
+                       backend="jax")
+
+
+def test_unknown_backend_rejected():
+    rng = np.random.default_rng(42)
+    with pytest.raises(ValueError, match="backend"):
+        dec.decide_all(rand_layers(rng, 2), rand_envs(rng, 2),
+                       backend="tpu")
+
+
+def test_efficiency_cost_conflict_guard_on_accelerator():
+    rng = np.random.default_rng(43)
+    with pytest.raises(ValueError, match="efficiency"):
+        dec.decide_all(rand_layers(rng, 2), rand_envs(rng, 2), 0.5,
+                       cost=co.AnalyticCost(), backend="jax")
+
+
+# --------------------------------------------------------------------------
+# hypothesis: backend equivalence over random env grids
+# --------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 12), st.integers(0, 24))
+def test_jax_equivalence_property(seed, n_layers, n_envs):
+    rng = np.random.default_rng(seed)
+    layers = rand_layers(rng, n_layers)
+    envs = rand_envs(rng, n_envs)
+    assert_plans_equal(decide_ref(layers, envs),
+                       dec.decide_all(layers, envs, backend="jax"))
+
+
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 20), st.integers(1, 16))
+def test_pallas_equivalence_property(seed, n_layers, n_envs):
+    rng = np.random.default_rng(seed)
+    layers = rand_layers(rng, n_layers)
+    envs = rand_envs(rng, n_envs)
+    ref = decide_ref(layers, envs)
+    got = dec.decide_all(layers, envs, backend="pallas")
+    # f32 argmin may legitimately flip at near-ties, so compare the
+    # achieved cost, not the index
+    np.testing.assert_allclose(
+        latency_matrix_ref(layers, envs)[np.arange(n_envs), got.splits],
+        ref.total_time_s, rtol=1e-4, atol=1e-12)

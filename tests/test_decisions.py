@@ -130,6 +130,68 @@ def test_decide_all_matches_scalar_loop():
             got.total_time_s, rtol=1e-9, atol=1e-9)
 
 
+def test_sweep_links_efficiency_passthrough():
+    """sweep_links must honour efficiency= exactly like decide_all does —
+    it used to silently pin DEFAULT_EFFICIENCY."""
+    rng = np.random.default_rng(23)
+    layers = rand_layers(rng, 9)
+    env = rand_env(rng)
+    bws = np.geomspace(1e5, 1e9, 16)
+    plan = dec.sweep_links(layers, env, bws, 0.5)
+    envs = dec.make_envs(env.device, env.edge, link_bw=bws,
+                         link_latency_s=env.link_latency_s,
+                         input_bytes=env.input_bytes)
+    want = dec.decide_all(layers, envs, 0.5)
+    assert np.array_equal(plan.splits, want.splits)
+    assert np.array_equal(plan.total_time_s, want.total_time_s)
+    # and a non-default efficiency must actually change the outcome
+    base = dec.sweep_links(layers, env, bws)
+    assert not np.array_equal(plan.total_time_s, base.total_time_s)
+
+
+def test_sweep_links_rejects_efficiency_with_cost():
+    """Same conflict guard as decide_all: efficiency= belongs to the
+    analytic default and must not be silently dropped with cost=."""
+    from repro.core import costs as co
+    rng = np.random.default_rng(24)
+    layers = rand_layers(rng, 4)
+    env = rand_env(rng)
+    with pytest.raises(ValueError, match="efficiency"):
+        dec.sweep_links(layers, env, [1e8], 0.5, cost=co.AnalyticCost())
+
+
+class _PriceOnlyCost:
+    """Latency-free cost model: ranks splits by shipped bytes alone."""
+    objectives = ("price",)
+
+    def components(self, layers, envs):
+        return dec.transfer_bytes(layers, envs)[..., None] * 1e-9
+
+    def scalarize(self, components):
+        return np.asarray(components)[..., 0]
+
+
+def test_total_time_nan_without_latency_objective():
+    """A cost model without "latency_s" has no seconds to report —
+    total_time_s must be NaN, not the scalarised cost in arbitrary units
+    (the ranking value lives in scalar_cost)."""
+    rng = np.random.default_rng(25)
+    layers = rand_layers(rng, 7)
+    envs = dec.make_envs(get_device("pi5-arm"),
+                         get_device("edge-server-a100"),
+                         link_bw=np.geomspace(1e5, 1e9, 8),
+                         input_bytes=1e5)
+    plan = dec.decide_all(layers, envs, cost=_PriceOnlyCost())
+    assert np.isnan(plan.total_time_s).all()
+    assert np.isfinite(plan.scalar_cost).all()
+    comp = _PriceOnlyCost().components(layers, envs)
+    rows = np.arange(len(envs))
+    np.testing.assert_array_equal(plan.scalar_cost,
+                                  comp[rows, plan.splits, 0])
+    np.testing.assert_array_equal(plan.objective("price"),
+                                  comp[rows, plan.splits, 0])
+
+
 def test_make_envs_broadcasts_device_vectors():
     devs = [get_device("pi5-arm"), get_device("xps15-i5")]
     envs = dec.make_envs(devs, get_device("edge-server-a100"),

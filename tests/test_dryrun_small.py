@@ -4,6 +4,12 @@ import json
 import subprocess
 import sys
 
+import pytest
+
+# subprocess jax re-imports + 8-device mesh dry-runs: minutes on CPU —
+# excluded from the fast lane, covered by the tier-1 job
+pytestmark = pytest.mark.slow
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -1,5 +1,10 @@
 """Federated profiling-model training tests (paper §II-B)."""
 import numpy as np
+import pytest
+
+# multi-round FedAvg fits: ~1.5 minutes on CPU — excluded from the fast
+# lane, covered by the tier-1 job
+pytestmark = pytest.mark.slow
 
 from repro.core.fl import (Client, DPConfig, FedAvgConfig, clip_update,
                            global_norm, privatise_update, run_fedavg,

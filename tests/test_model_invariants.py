@@ -12,6 +12,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# per-family model equivalence sweeps: ~2 minutes on CPU — excluded from
+# the fast lane, covered by the tier-1 job
+pytestmark = pytest.mark.slow
+
 from repro.configs import reduced_config
 from repro.data.synthetic import prefill_batch
 from repro.models import build_model

@@ -5,8 +5,13 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.ckpt import checkpoint as ckpt
+
+# end-to-end train/serve/checkpoint round-trips: ~1 minute on CPU —
+# excluded from the fast lane, covered by the tier-1 job
+pytestmark = pytest.mark.slow
 from repro.configs import reduced_config
 from repro.serve import Request, ServeEngine
 from repro.train import TrainConfig, train
