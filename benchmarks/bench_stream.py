@@ -1,0 +1,125 @@
+"""Streaming re-plan benchmark: incremental vs from-scratch per arrival.
+
+Sweeps Poisson arrival rate × cluster size × scheduler policy and
+compares two ways of re-planning on every arrival event:
+
+  * ``incremental``  — :class:`repro.sim.stream.StreamScheduler`: the
+                       persistent ``[T, N]`` finish/ETC state grows by
+                       the arriving row, placements refresh one column,
+                       nothing is ever rebuilt
+  * ``fromscratch``  — the naive baseline: every arrival recomputes the
+                       full ETC matrix over all tasks seen so far and
+                       replays batch ``min_min`` from the initial node
+                       state (what a batch-mode scheduler bolted onto a
+                       stream has to do)
+
+Full (non-smoke) runs write ``BENCH_4.json`` at the repo root — the
+committed baseline.  Every run (smoke included — the CI gate) asserts
+the incremental scheduler is not slower than from-scratch at the
+largest swept config.
+
+Run:  PYTHONPATH=src python benchmarks/bench_stream.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):            # `python benchmarks/bench_...py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import emit
+from repro.core import scheduler as sch
+from repro.hw import EDGE_DEVICES
+from repro.sim import StreamScheduler, poisson_arrivals
+
+
+def make_cluster(n_nodes: int) -> list[sch.Node]:
+    specs = list(EDGE_DEVICES.values())
+    return [sch.Node(specs[j % len(specs)]) for j in range(n_nodes)]
+
+
+def make_tasks(n: int, seed: int = 0) -> list[sch.Task]:
+    rng = np.random.default_rng(seed)
+    return [sch.Task(f"t{i}", flops=float(rng.uniform(1e9, 5e11)),
+                     input_bytes=float(rng.uniform(1e4, 1e7)))
+            for i in range(n)]
+
+
+def run_incremental(tasks, arrivals, nodes) -> float:
+    """Wall seconds to stream every arrival through StreamScheduler."""
+    s = StreamScheduler(nodes)
+    t0 = time.perf_counter()
+    s.run(tasks, arrivals)
+    dt = time.perf_counter() - t0
+    assert s.full_rebuilds == 0 and s.rows_built == len(tasks)
+    return dt
+
+
+def run_fromscratch(tasks, arrivals, nodes) -> float:
+    """Wall seconds for the naive baseline: per arrival, rebuild the ETC
+    matrix over all tasks so far and replay batch min_min."""
+    t0 = time.perf_counter()
+    for k in range(1, len(tasks) + 1):
+        etc = sch.etc_matrix(tasks[:k], nodes)
+        sch.min_min(tasks[:k], nodes, etc)
+    return time.perf_counter() - t0
+
+
+def main(smoke: bool = False) -> list[dict]:
+    n_tasks = 80 if smoke else 300
+    cells = [(50.0, 8), (200.0, 8), (50.0, 32), (200.0, 32)]
+    reps = 1 if smoke else 3
+    rows: list[dict] = []
+    largest = cells[-1]
+    for rate, n_nodes in cells:
+        tasks = make_tasks(n_tasks, seed=int(rate) + n_nodes)
+        arrivals = poisson_arrivals(rate, n=n_tasks,
+                                    seed=int(rate) * 7 + n_nodes)
+        nodes = make_cluster(n_nodes)
+        t_inc = min(run_incremental(tasks, arrivals, nodes)
+                    for _ in range(reps))
+        t_scr = min(run_fromscratch(tasks, arrivals, nodes)
+                    for _ in range(reps))
+        for name, dt in (("incremental", t_inc), ("fromscratch", t_scr)):
+            rows.append({
+                "name": f"stream_{name}_r{rate:.0f}_n{n_nodes}",
+                "scheduler": name,
+                "rate_eps": rate,
+                "n_nodes": n_nodes,
+                "n_tasks": n_tasks,
+                "us_per_arrival": dt / n_tasks * 1e6,
+                "total_ms": dt * 1e3,
+            })
+        # the makespan belongs to the incremental row only: the naive
+        # baseline replays arrival-blind batch min_min, so its schedule
+        # is a different (and unreported) quantity
+        rows[-2]["makespan_s"] = StreamScheduler(make_cluster(n_nodes)) \
+            .run(tasks, arrivals).makespan
+        rows[-2]["speedup_vs_fromscratch"] = t_scr / t_inc
+        if (rate, n_nodes) == largest:
+            # the CI gate: incremental must not lose to a full rebuild
+            assert t_inc <= t_scr, (
+                f"incremental streaming re-plan slower than from-scratch "
+                f"min_min at the largest config (rate={rate}, "
+                f"n_nodes={n_nodes}): {t_inc*1e3:.1f}ms vs "
+                f"{t_scr*1e3:.1f}ms")
+    if not smoke:                        # smoke must not clobber the baseline
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        with open(os.path.join(root, "BENCH_4.json"), "w") as f:
+            json.dump(rows, f, indent=1, default=float)
+    emit(rows, "stream")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes / few reps for CI")
+    main(smoke=ap.parse_args().smoke)

@@ -96,6 +96,48 @@ def pareto_front(costs: np.ndarray) -> np.ndarray:
     return ~dominated
 
 
+def pareto_pick(components: np.ndarray, objectives: Sequence[str],
+                weights: Optional[Mapping[str, float]] = None, *,
+                subset: Optional[Sequence[str]] = None,
+                scalar: Optional[np.ndarray] = None
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """``(front, picks)``: the non-dominated mask and the scalarised
+    argmin *restricted to that front*, per environment.
+
+    ``components`` is ``[..., S, K]`` (candidate splits × objectives).
+    ``subset`` names the objectives the domination test runs on
+    (default: all of ``objectives``).  The ranking over the front is the
+    weighted sum over the full stack, or ``scalar`` — a precomputed
+    ``[..., S]`` ranking matrix (e.g. ``cost.scalarize(components)``
+    from a model with a bespoke scalarisation) — when given.
+    Restricting the argmin to the front is what lets a streaming
+    scheduler re-pick along a live Pareto front as the environment
+    drifts and still guarantee every pick is non-dominated — an
+    unrestricted weighted argmin only guarantees that for strictly
+    positive weights.
+    """
+    comp = np.asarray(components, np.float64)
+    names = tuple(objectives)
+    if subset is None:
+        dom = comp
+    else:
+        unknown = set(subset) - set(names)
+        if unknown:
+            raise KeyError(f"unknown objective(s) {sorted(unknown)}; "
+                           f"known: {list(names)}")
+        dom = comp[..., [names.index(n) for n in subset]]
+    front = pareto_front(dom)
+    if scalar is None:
+        scalar = scalarize_weighted(comp, names, weights)
+    else:
+        scalar = np.asarray(scalar, np.float64)
+        if scalar.shape != comp.shape[:-1]:
+            raise ValueError(f"scalar must be {comp.shape[:-1]}, "
+                             f"got {scalar.shape}")
+    picks = np.argmin(np.where(front, scalar, np.inf), axis=-1)
+    return front, picks
+
+
 def weight_vector(objectives: Sequence[str],
                   weights: Optional[Mapping[str, float]]) -> np.ndarray:
     """Objective-ordered weight vector.  ``weights`` maps objective name →

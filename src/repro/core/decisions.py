@@ -285,6 +285,77 @@ def decide_all(layers: Sequence[LayerCost], envs: EnvArrays,
                         scalar_cost=scalar[rows, s])
 
 
+def take_envs(envs: EnvArrays, idx) -> EnvArrays:
+    """Row-subset of an :class:`EnvArrays` (``idx`` is an integer index
+    array or boolean mask over the environment axis)."""
+    idx = np.asarray(idx)
+
+    def take(a):
+        return None if a is None else a[idx]
+
+    return EnvArrays(envs.dev_flops[idx], envs.edge_flops[idx],
+                     envs.link_bw[idx], envs.link_latency_s[idx],
+                     envs.input_bytes[idx], take(envs.dev_tdp_watts),
+                     take(envs.edge_tdp_watts))
+
+
+def replan(layers: Sequence[LayerCost], envs: EnvArrays,
+           prev: DecisionPlan, changed, *,
+           efficiency: float = EFFICIENCY, cost=None,
+           backend: str = "numpy") -> DecisionPlan:
+    """Incremental :func:`decide_all`: re-decide only the ``changed``
+    environments and splice the fresh rows into ``prev``.
+
+    ``changed`` is an integer index array or boolean mask over the
+    environment axis — in a streaming run, the environments whose link
+    state or backlog actually drifted since ``prev`` was computed
+    (:mod:`repro.sim.state` tracks them).  Rows outside ``changed`` are
+    carried over untouched, so the result is bit-for-bit what a full
+    ``decide_all`` over the updated ``envs`` would return, at the cost
+    of the changed rows only.
+    """
+    idx = np.asarray(changed)
+    if idx.dtype == bool:
+        if idx.shape != (len(envs),):
+            raise ValueError(
+                f"boolean changed mask must be [{len(envs)}], "
+                f"got {idx.shape}")
+        idx = np.flatnonzero(idx)
+    if len(prev) != len(envs):
+        raise ValueError(
+            f"prev plan covers {len(prev)} envs, got {len(envs)}")
+    if idx.size == 0:
+        return prev
+    sub = decide_all(layers, take_envs(envs, idx), efficiency,
+                     cost=cost, backend=backend)
+    if sub.objectives != prev.objectives:
+        raise ValueError(
+            f"cost model changed between plans: prev objectives "
+            f"{prev.objectives}, new {sub.objectives} — replan only "
+            "splices rows of the same objective stack")
+
+    def scatter(old, new):
+        if old is None or new is None:
+            if (old is None) != (new is None):
+                raise ValueError(
+                    "prev and updated plans disagree on carrying "
+                    "components/scalar_cost — same cost= required")
+            return None
+        out = np.asarray(old).copy()
+        out[idx] = new
+        return out
+
+    return DecisionPlan(scatter(prev.splits, sub.splits),
+                        scatter(prev.total_time_s, sub.total_time_s),
+                        scatter(prev.device_time_s, sub.device_time_s),
+                        scatter(prev.transfer_time_s, sub.transfer_time_s),
+                        scatter(prev.edge_time_s, sub.edge_time_s),
+                        objectives=prev.objectives,
+                        components=scatter(prev.components, sub.components),
+                        scalar_cost=scatter(prev.scalar_cost,
+                                            sub.scalar_cost))
+
+
 def sweep_links(layers: Sequence[LayerCost], env_base: OffloadEnv,
                 link_bws, efficiency: float = EFFICIENCY, *,
                 cost=None, backend: str = "numpy") -> DecisionPlan:

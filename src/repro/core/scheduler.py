@@ -94,6 +94,17 @@ def _fresh(nodes: Sequence[Node]) -> list[Node]:
     return [dataclasses.replace(n) for n in nodes]
 
 
+def masked_argmin(fin: np.ndarray, active: np.ndarray) -> tuple[int, int]:
+    """The min-min pick: ``(task, node)`` of the smallest finish time
+    among the ``active`` rows of a ``[T, N]`` finish matrix, row-major
+    first occurrence on ties.  Shared by the batch :func:`min_min` and
+    the incremental streaming scheduler (:mod:`repro.sim.stream`), so
+    the two stay tie-break-for-tie-break identical."""
+    flat = int(np.argmin(np.where(active[:, None], fin, np.inf)))
+    i, j = divmod(flat, fin.shape[1])
+    return i, j
+
+
 def _assign(task, node, etc_tn) -> Assignment:
     start = node.available_at
     finish = start + etc_tn
@@ -135,8 +146,7 @@ def min_min(tasks, nodes, etc) -> Schedule:
     active = np.ones(n_t, bool)
     out = []
     for _ in range(n_t):
-        flat = int(np.argmin(np.where(active[:, None], fin, np.inf)))
-        i, j = divmod(flat, n_n)
+        i, j = masked_argmin(fin, active)
         out.append(Assignment(tasks[i], nodes[j].spec.name,
                               float(avail[j]), float(fin[i, j])))
         avail[j] = fin[i, j]

@@ -52,12 +52,21 @@ class ContinuousBatchEngine:
     ``decision_backend`` selects where those re-planning sweeps run
     (``"numpy"`` host default, ``"jax"`` jitted next to the model) — see
     :func:`repro.core.decisions.decide_all`.
+
+    Admission is clocked: the engine keeps a virtual
+    :class:`repro.sim.events.Clock` that advances ``step_latency_s``
+    per decode step (and jumps forward over idle gaps), and a request is
+    only admitted once ``request.arrived_at`` has passed — never the
+    moment a slot happens to be free.  Inject ``clock=`` to share one
+    virtual time axis with a :mod:`repro.sim` run; each admitted request
+    records its admission instant on ``request.admitted_at``.
     """
 
     def __init__(self, cfg, *, slots: int = 4, max_len: int = 256,
                  seed: int = 0, cost=None, link_bw=1.25e9,
                  offload_device=None, offload_edge=None,
-                 decision_backend: str = "numpy"):
+                 decision_backend: str = "numpy",
+                 clock=None, step_latency_s: float = 5e-3):
         assert cfg.family in ("dense", "moe", "vlm") \
             and cfg.attn_kind == "gqa", \
             "continuous batching requires the vector-position GQA decode path"
@@ -70,6 +79,14 @@ class ContinuousBatchEngine:
         self.link_bw = link_bw           # float or () -> float observation
         self.offload_device = offload_device
         self.offload_edge = offload_edge
+        if clock is None:
+            # deferred: the serving layer must not pull in the whole
+            # simulator at import time — any object with .now/.advance/
+            # .advance_to (e.g. an injected sim Clock) works
+            from repro.sim.events import Clock
+            clock = Clock()
+        self.clock = clock
+        self.step_latency_s = float(step_latency_s)
         self.replans = 0
         self.params = self.api.init_params(jax.random.key(seed))
         self.cache = self.api.init_cache(slots, max_len)
@@ -126,6 +143,7 @@ class ContinuousBatchEngine:
 
     # -- admission ------------------------------------------------------------
     def _admit(self, req: Request, slot: int):
+        req.admitted_at = self.clock.now
         if self.cost is not None:
             self._plan_offload(req)
         batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
@@ -143,9 +161,15 @@ class ContinuousBatchEngine:
         queue = sorted(requests, key=lambda r: r.arrived_at)
         done: list[Request] = []
         while queue or any(r is not None for r in self.slot_req):
-            # fill free slots
+            # idle engine + future arrivals only: jump the virtual clock
+            # to the next arrival instead of spinning empty decode steps
+            if queue and not any(r is not None for r in self.slot_req) \
+                    and queue[0].arrived_at > self.clock.now:
+                self.clock.advance_to(queue[0].arrived_at)
+            # fill free slots — only with requests that have arrived
             for s in range(self.slots):
-                if self.slot_req[s] is None and queue:
+                if self.slot_req[s] is None and queue \
+                        and queue[0].arrived_at <= self.clock.now:
                     self._admit(queue.pop(0), s)
             # one decode step for all active slots, ragged per-slot positions
             toks = jnp.asarray(self.slot_last_tok[:, None], jnp.int32)
@@ -154,6 +178,7 @@ class ContinuousBatchEngine:
                                               self.cache)
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
             self.steps += 1
+            self.clock.advance(self.step_latency_s)
             for s in range(self.slots):
                 req = self.slot_req[s]
                 if req is None:

@@ -27,6 +27,10 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     arrived_at: float = 0.0
+    # virtual time the request was admitted to a slot.  Filled only by
+    # ContinuousBatchEngine (which guarantees admitted_at >= arrived_at);
+    # stays 0.0 under ServeEngine's static batching
+    admitted_at: float = 0.0
     # filled on completion
     output: Optional[np.ndarray] = None
     first_token_s: float = 0.0

@@ -1,0 +1,39 @@
+"""repro.sim — event-driven streaming offload simulator.
+
+Closes the batch-world gap: tasks arrive over virtual time (Poisson,
+trace, Markov-modulated, diurnal), link bandwidth and node backlog
+drift as seeded stochastic processes, and the existing decision core
+(``repro.core.decisions`` / ``costs`` and the jit/Pallas kernels) is
+driven *online* through state snapshots — incremental re-planning on
+the live ``[T, N]`` finish matrix (:class:`StreamScheduler`) and
+Pareto-front re-picking of offload splits
+(:class:`ParetoStreamScheduler`), with run telemetry in the same record
+schema the batch benchmarks emit.
+
+Seams (each pinned by tests/test_sim.py; the fast lane covers the
+deterministic smoke, tier-1 adds the slow end-to-end run):
+
+  * events    — virtual clock, event heap, arrival processes
+  * state     — drifting links snapshotted into ``EnvArrays``
+  * stream    — incremental online min-min/HEFT + the event loop
+  * pareto    — live Pareto-front split re-picking
+  * telemetry — p50/p99, misses, energy, utilisation, re-plan counts
+"""
+from repro.sim.events import (Clock, Event, EventQueue, diurnal_arrivals,
+                              mmpp_arrivals, poisson_arrivals,
+                              trace_arrivals)
+from repro.sim.pareto import PARETO_OBJECTIVES, ParetoStreamScheduler
+from repro.sim.state import (ClusterLinks, DiurnalLink, DriftingEnv,
+                             FixedLink, LinkProcess, RandomWalkLink,
+                             TwoStateLink)
+from repro.sim.stream import StreamScheduler, simulate_stream
+from repro.sim.telemetry import TaskRecord, Telemetry
+
+__all__ = [
+    "Clock", "Event", "EventQueue", "poisson_arrivals", "trace_arrivals",
+    "mmpp_arrivals", "diurnal_arrivals", "LinkProcess", "FixedLink",
+    "RandomWalkLink", "TwoStateLink", "DiurnalLink", "DriftingEnv",
+    "ClusterLinks", "StreamScheduler", "simulate_stream",
+    "ParetoStreamScheduler", "PARETO_OBJECTIVES", "TaskRecord",
+    "Telemetry",
+]

@@ -1,0 +1,195 @@
+"""Pareto-aware streaming split planning: keep every live task's
+(latency, energy, price) Pareto front alive and re-pick along it as the
+link drifts, instead of committing to one scalarisation at admission.
+
+This closes the seam PR 2 opened: :class:`repro.core.costs.
+CompositeCost` can *extract* a per-environment Pareto front, but every
+batch consumer immediately collapses it with one weighted argmin and
+commits.  Under drifting 6G link state that committed split goes stale —
+the split that was latency-optimal on a fast link ships too many bytes
+once the link degrades.  :class:`ParetoStreamScheduler` instead:
+
+  * at admission, computes the task's full ``[L+1, K]`` component
+    matrix, extracts the non-dominated front over the configured
+    ``pareto_objectives``, and picks the scalarised argmin *restricted
+    to the front* (:func:`repro.core.costs.pareto_pick`);
+  * on every link observation, recomputes the components of all live
+    tasks in ONE batched ``cost.components`` call per distinct layer
+    chain (the environments stack into one
+    :class:`repro.core.decisions.EnvArrays`), re-extracts the current
+    fronts, and re-picks — counting a *switch* whenever a task's chosen
+    split moves;
+  * verifies (``verify=True``, cheap) that every pick is on the current
+    non-dominated front before accepting it.
+
+Completion returns the realised components of both the live pick and
+the admission-time pick under the *final* link state, so policies
+("re-pick along the front" vs "commit at admission") can be compared on
+what the task actually experienced.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import costs as co
+from repro.core.decisions import make_envs
+from repro.core.offload import LayerCost
+from repro.hw import DeviceSpec, get_device
+from repro.sim.telemetry import Telemetry
+
+#: default objective subset the domination test runs on (deadline slack
+#: stays in the scalarisation but not the front, per the paper's
+#: latency/energy/price trade-off)
+PARETO_OBJECTIVES = ("latency_s", "energy_j", "price")
+
+
+@dataclasses.dataclass
+class SplitState:
+    """One live task's split plan."""
+    rid: int
+    layers: Sequence[LayerCost]
+    input_bytes: float
+    deadline_s: Optional[float]
+    pick: int                        # current split on the live front
+    admission_pick: int
+    front_size: int
+    switches: int = 0
+    history: list = dataclasses.field(default_factory=list)
+
+
+class ParetoStreamScheduler:
+    """Online device↔edge split planner that re-picks along live
+    Pareto fronts.
+
+    ``cost`` must expose the multi-objective ``components`` /
+    ``objectives`` / ``scalarize`` surface (default: an equal-weight
+    :class:`repro.core.costs.CompositeCost` over the analytic base);
+    ``pareto_objectives`` names the objectives the domination test uses.
+    """
+
+    def __init__(self, cost=None, *, device: Optional[DeviceSpec] = None,
+                 edge: Optional[DeviceSpec] = None,
+                 pareto_objectives: Sequence[str] = PARETO_OBJECTIVES,
+                 link_latency_s: float = 0.005, verify: bool = True,
+                 telemetry: Optional[Telemetry] = None):
+        self.cost = cost if cost is not None else co.CompositeCost(
+            price_per_edge_s=0.1, price_per_gb=0.02)
+        missing = set(pareto_objectives) - set(self.cost.objectives)
+        if missing:
+            raise KeyError(
+                f"pareto objectives {sorted(missing)} not produced by "
+                f"{type(self.cost).__name__} "
+                f"(objectives: {list(self.cost.objectives)})")
+        self.pareto_objectives = tuple(pareto_objectives)
+        self.device = device or get_device("jetson-orin-nano")
+        self.edge = edge or get_device("edge-server-a100")
+        self.link_latency_s = link_latency_s
+        self.verify = verify
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.live: dict[int, SplitState] = {}
+        self.total_repicks = 0
+        self.total_switches = 0
+
+    # -- internals --------------------------------------------------------
+    def _envs(self, link_bw: float, input_bytes) -> "co.EnvArrays":
+        ib = np.atleast_1d(np.asarray(input_bytes, np.float64))
+        return make_envs(self.device, self.edge,
+                         link_bw=np.full(ib.shape, float(link_bw)),
+                         link_latency_s=self.link_latency_s,
+                         input_bytes=ib)
+
+    def _pick_rows(self, layers, link_bw: float, input_bytes
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``(components [E, L+1, K], front [E, L+1], picks [E])`` for
+        tasks sharing one layer chain at the current link state."""
+        envs = self._envs(link_bw, input_bytes)
+        comp = np.asarray(self.cost.components(layers, envs), np.float64)
+        # rank with the model's own scalarisation (not a re-derived
+        # weighted sum) so picks agree with decide_all(cost=...) up to
+        # the front restriction, whatever the model's scalarize does
+        front, picks = co.pareto_pick(comp, self.cost.objectives,
+                                      subset=self.pareto_objectives,
+                                      scalar=self.cost.scalarize(comp))
+        if self.verify:
+            rows = np.arange(len(picks))
+            if not bool(front[rows, picks].all()):
+                raise AssertionError(
+                    "pareto_pick returned a dominated split — "
+                    "cost model produced inconsistent components")
+        return comp, front, picks
+
+    # -- lifecycle --------------------------------------------------------
+    def admit(self, rid: int, layers: Sequence[LayerCost],
+              link_bw: float, *, input_bytes: float = 0.0,
+              now: float = 0.0,
+              deadline_s: Optional[float] = None) -> SplitState:
+        """Plan the split for one admitted task at the current link
+        observation; the task stays live (re-picked on every subsequent
+        link event) until :meth:`complete`."""
+        if rid in self.live:
+            raise KeyError(f"rid {rid} already live")
+        _, front, picks = self._pick_rows(layers, link_bw,
+                                          [input_bytes])
+        st = SplitState(rid=rid, layers=layers,
+                        input_bytes=float(input_bytes),
+                        deadline_s=deadline_s, pick=int(picks[0]),
+                        admission_pick=int(picks[0]),
+                        front_size=int(front[0].sum()),
+                        history=[(float(now), int(picks[0]))])
+        self.live[rid] = st
+        self.telemetry.count("split_admissions")
+        return st
+
+    def on_link(self, link_bw: float, now: float = 0.0) -> int:
+        """Re-pick every live task along its *current* front at the new
+        link observation.  Tasks sharing a layer-chain object are
+        re-picked in one batched ``components`` call.  Returns the
+        number of tasks whose split switched."""
+        if not self.live:
+            return 0
+        groups: dict[int, list[SplitState]] = {}
+        for st in self.live.values():
+            groups.setdefault(id(st.layers), []).append(st)
+        switched = 0
+        for members in groups.values():
+            _, front, picks = self._pick_rows(
+                members[0].layers, link_bw,
+                [st.input_bytes for st in members])
+            for k, st in enumerate(members):
+                self.total_repicks += 1
+                self.telemetry.count("split_repicks")
+                st.front_size = int(front[k].sum())
+                new = int(picks[k])
+                if new != st.pick:
+                    st.pick = new
+                    st.switches += 1
+                    st.history.append((float(now), new))
+                    switched += 1
+                    self.total_switches += 1
+                    self.telemetry.count("split_switches")
+        return switched
+
+    def complete(self, rid: int, link_bw: float, *,
+                 now: float = 0.0) -> dict:
+        """Close a task's plan.  Returns its final pick, switch count,
+        and the realised objective components — of both the live pick
+        and the admission-time pick — under the final link state, so
+        Pareto re-picking can be scored against commit-at-admission."""
+        st = self.live.pop(rid)
+        comp, _, _ = self._pick_rows(st.layers, link_bw,
+                                     [st.input_bytes])
+        names = tuple(self.cost.objectives)
+        realised = {n: float(comp[0, st.pick, k])
+                    for k, n in enumerate(names)}
+        committed = {n: float(comp[0, st.admission_pick, k])
+                     for k, n in enumerate(names)}
+        return {
+            "rid": rid, "pick": st.pick,
+            "admission_pick": st.admission_pick,
+            "switches": st.switches, "front_size": st.front_size,
+            "history": list(st.history), "finished_s": float(now),
+            "realised": realised, "realised_at_admission_pick": committed,
+        }

@@ -1,0 +1,219 @@
+"""Drifting environment state: link bandwidth / backlog processes.
+
+The batch decision core freezes the world at t=0; this module is what
+un-freezes it.  Each :class:`LinkProcess` is a seeded stochastic process
+advanced by ``step(dt)`` between events:
+
+  * :class:`RandomWalkLink`  — geometric (log-space) random walk, the
+                               slow-fading "drifting 6G link"
+  * :class:`TwoStateLink`    — Gilbert–Elliott good/bad channel with
+                               exponential dwell times (bursty outages)
+  * :class:`DiurnalLink`     — deterministic sinusoid × optional
+                               log-normal noise (cell-load tide)
+  * :class:`FixedLink`       — constant (the static-world pin used by
+                               the equivalence tests)
+
+:class:`DriftingEnv` snapshots the current state into the exact
+:class:`repro.core.decisions.EnvArrays` the batch core consumes, so
+``decide_all`` / ``sweep_links`` and the jit/Pallas backends from the
+kernel layer are reused *unchanged* — the simulator never forks the
+decision math.  :class:`ClusterLinks` carries one process per scheduler
+node for the ``[T, N]`` streaming placement path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core.decisions import EnvArrays, make_envs
+from repro.hw import DeviceSpec
+
+
+@runtime_checkable
+class LinkProcess(Protocol):
+    """A seeded bandwidth process: ``value`` is the current bytes/s,
+    ``step(dt)`` advances virtual time and returns the new value."""
+
+    @property
+    def value(self) -> float: ...
+
+    def step(self, dt: float) -> float: ...
+
+
+@dataclasses.dataclass
+class FixedLink:
+    """Constant bandwidth — the degenerate static-world process."""
+    bw: float
+
+    @property
+    def value(self) -> float:
+        return float(self.bw)
+
+    def step(self, dt: float) -> float:
+        return self.value
+
+
+@dataclasses.dataclass
+class RandomWalkLink:
+    """Geometric random walk: ``log bw`` takes N(0, sigma²·dt) steps,
+    clipped to ``[min_bw, max_bw]`` — slow fading around ``base_bw``."""
+    base_bw: float
+    sigma: float = 0.3           # log-space std per sqrt(second)
+    min_bw: float = 1e4
+    max_bw: float = 1e11
+    seed: int = 0
+
+    def __post_init__(self):
+        if not self.min_bw <= self.base_bw <= self.max_bw:
+            raise ValueError("need min_bw <= base_bw <= max_bw")
+        self._rng = np.random.default_rng(self.seed)
+        self._log = math.log(self.base_bw)
+
+    @property
+    def value(self) -> float:
+        return float(math.exp(self._log))
+
+    def step(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"dt must be >= 0, got {dt}")
+        self._log += float(self._rng.normal(0.0,
+                                            self.sigma * math.sqrt(dt)))
+        self._log = min(max(self._log, math.log(self.min_bw)),
+                        math.log(self.max_bw))
+        return self.value
+
+
+@dataclasses.dataclass
+class TwoStateLink:
+    """Gilbert–Elliott channel: good/bad bandwidth with exponential
+    dwell times (means ``mean_good_s`` / ``mean_bad_s``)."""
+    good_bw: float
+    bad_bw: float
+    mean_good_s: float = 5.0
+    mean_bad_s: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.mean_good_s <= 0 or self.mean_bad_s <= 0:
+            raise ValueError("dwell-time means must be positive")
+        self._rng = np.random.default_rng(self.seed)
+        self.good = True
+        self._remaining = float(self._rng.exponential(self.mean_good_s))
+
+    @property
+    def value(self) -> float:
+        return float(self.good_bw if self.good else self.bad_bw)
+
+    def step(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"dt must be >= 0, got {dt}")
+        dt = float(dt)
+        while dt >= self._remaining:       # may switch several times
+            dt -= self._remaining
+            self.good = not self.good
+            mean = self.mean_good_s if self.good else self.mean_bad_s
+            self._remaining = float(self._rng.exponential(mean))
+        self._remaining -= dt
+        return self.value
+
+
+@dataclasses.dataclass
+class DiurnalLink:
+    """Sinusoidal capacity tide around ``base_bw`` with optional
+    multiplicative log-normal noise — the diurnal cell-load model."""
+    base_bw: float
+    amplitude: float = 0.5       # fraction of base_bw, in [0, 1)
+    period_s: float = 60.0
+    noise_sigma: float = 0.0     # log-space noise std per step
+    phase: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.amplitude < 1.0:
+            raise ValueError("amplitude must be in [0, 1)")
+        self._rng = np.random.default_rng(self.seed)
+        self._t = 0.0
+        self._noise = 1.0
+
+    @property
+    def value(self) -> float:
+        tide = 1.0 + self.amplitude * math.sin(
+            2.0 * math.pi * self._t / self.period_s + self.phase)
+        return float(self.base_bw * tide * self._noise)
+
+    def step(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"dt must be >= 0, got {dt}")
+        self._t += float(dt)
+        if self.noise_sigma > 0:
+            self._noise = float(np.exp(
+                self._rng.normal(0.0, self.noise_sigma)))
+        return self.value
+
+
+# --------------------------------------------------------------------------
+# Snapshots into the batch decision core's EnvArrays
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class DriftingEnv:
+    """One device↔edge pair whose link drifts over virtual time.
+
+    ``snapshot()`` freezes the current state into an
+    :class:`EnvArrays` (``E = len(input_bytes)``; scalar input gives
+    ``E = 1``) so every existing consumer — ``decide_all``,
+    ``sweep_links``, the cost models, the jit/Pallas kernels — runs on
+    live state without modification.
+    """
+    device: DeviceSpec
+    edge: DeviceSpec
+    link: LinkProcess
+    link_latency_s: float = 0.005
+    input_bytes: float = 0.0
+
+    def step(self, dt: float) -> float:
+        return self.link.step(dt)
+
+    @property
+    def link_bw(self) -> float:
+        return self.link.value
+
+    def snapshot(self, input_bytes=None) -> EnvArrays:
+        ib = self.input_bytes if input_bytes is None else input_bytes
+        ib = np.atleast_1d(np.asarray(ib, np.float64))
+        return make_envs(self.device, self.edge,
+                         link_bw=np.full(ib.shape, self.link.value),
+                         link_latency_s=self.link_latency_s,
+                         input_bytes=ib)
+
+
+class ClusterLinks:
+    """Per-node uplink processes for the streaming placement path.
+
+    ``step(dt)`` advances every node's process and returns the ``[N]``
+    bandwidth vector; ``changed(prev)`` gives the node indices whose
+    bandwidth moved — the columns the incremental scheduler refreshes.
+    """
+
+    def __init__(self, processes: Sequence[LinkProcess]):
+        if not processes:
+            raise ValueError("need at least one link process")
+        self.processes = list(processes)
+
+    @classmethod
+    def random_walk(cls, base_bws: Sequence[float], *, sigma: float = 0.3,
+                    seed: int = 0) -> "ClusterLinks":
+        return cls([RandomWalkLink(float(bw), sigma=sigma, seed=seed + j)
+                    for j, bw in enumerate(base_bws)])
+
+    def __len__(self) -> int:
+        return len(self.processes)
+
+    def values(self) -> np.ndarray:
+        return np.asarray([p.value for p in self.processes], np.float64)
+
+    def step(self, dt: float) -> np.ndarray:
+        return np.asarray([p.step(dt) for p in self.processes],
+                          np.float64)

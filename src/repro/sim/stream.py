@@ -1,0 +1,343 @@
+"""Online streaming placement: incremental min-min / HEFT over a live
+``[T, N]`` finish matrix, plus the event-driven run loop.
+
+The batch schedulers in :mod:`repro.core.scheduler` assume every task is
+known at t=0 and place all of them in one pass.  :class:`StreamScheduler`
+is their online twin: tasks arrive over virtual time, each admission
+event extends the finish matrix by the arriving rows only, each
+placement refreshes the placed node's column only, and each link-state
+update refreshes the affected node's ETC column only — the matrix is
+*never* rebuilt from scratch (``telemetry`` counts rows built and
+columns refreshed; ``full_rebuilds`` stays 0 by construction).
+
+Equivalence pin (tested): with every arrival at t=0 and static links,
+``StreamScheduler.run`` reproduces the batch ``min_min`` / ``heft``
+schedules bit-for-bit — same arithmetic, same
+:func:`repro.core.scheduler.masked_argmin` tie-break.
+
+:func:`simulate_stream` is the event loop tying the pieces together:
+arrival events admit tasks, completion events free nodes (optionally
+migrating the tail of the most backlogged queue onto the freed node),
+link events drift the per-node uplinks (:class:`repro.sim.state.
+ClusterLinks`) and the device↔edge split environment
+(:class:`repro.sim.state.DriftingEnv`), and a
+:class:`repro.sim.pareto.ParetoStreamScheduler` may ride along to keep
+each live task's offload split on the Pareto front.  Results land in a
+:class:`repro.sim.telemetry.Telemetry`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import scheduler as sch
+from repro.sim.events import EventQueue
+from repro.sim.state import ClusterLinks, DriftingEnv
+from repro.sim.telemetry import TaskRecord, Telemetry
+
+
+def _batches_by_arrival(arrivals: np.ndarray
+                        ) -> list[tuple[float, list[int]]]:
+    """``(time, task indices)`` admission batches: arrival order, exact
+    time ties grouped into one batch (stable within a batch)."""
+    order = np.argsort(arrivals, kind="stable")
+    out: list[tuple[float, list[int]]] = []
+    k = 0
+    while k < len(order):
+        m = k
+        t = float(arrivals[order[k]])
+        while m < len(order) and arrivals[order[m]] == t:
+            m += 1
+        out.append((t, [int(i) for i in order[k:m]]))
+        k = m
+    return out
+
+
+class StreamScheduler:
+    """Incremental online min-min / HEFT placement.
+
+    ``policy`` is ``"min_min"`` (globally smallest finish first, the
+    classic online heuristic) or ``"heft"`` (rank arriving batch by mean
+    ETC descending, place each on its earliest-finish node).  ``cost``
+    plugs a :class:`repro.core.costs.CostModel` into the ETC rows
+    (predictor-driven or multi-objective streaming placement); ``None``
+    keeps the analytic roofline estimate.  ``rebalance=True`` lets
+    :meth:`on_node_free` migrate the tail of the most backlogged queue
+    onto a freed node when that strictly improves its finish time.
+    """
+
+    def __init__(self, nodes: Sequence[sch.Node], *,
+                 policy: str = "min_min", cost=None,
+                 rebalance: bool = False,
+                 telemetry: Optional[Telemetry] = None):
+        if policy not in ("min_min", "heft"):
+            raise ValueError(f"unknown policy {policy!r}; "
+                             "use 'min_min' or 'heft'")
+        self.policy = policy
+        self.cost = cost
+        self.rebalance = rebalance
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.nodes = [dataclasses.replace(n) for n in nodes]
+        self.avail = np.asarray([n.available_at for n in self.nodes],
+                                np.float64)
+        self.assignments: list[sch.Assignment] = []
+        self._node_of: dict[int, int] = {}       # id(assignment) -> node j
+        self._etc_of: dict[int, float] = {}      # id(assignment) -> etc
+        # incremental-work counters (full_rebuilds stays 0 by construction)
+        self.rows_built = 0
+        self.column_refreshes = 0
+        self.link_refreshes = 0
+        self.migrations = 0
+        self.full_rebuilds = 0
+
+    # -- ETC rows against the *current* node/link state -------------------
+    def etc_rows(self, tasks: Sequence[sch.Task]) -> np.ndarray:
+        """``[P, N]`` expected-time-to-compute of the arriving batch on
+        every node, at the current link state."""
+        etc = sch.etc_matrix(tasks, self.nodes, cost=self.cost)
+        self.rows_built += len(tasks)
+        return np.asarray(etc, np.float64)
+
+    def set_link_bw(self, j: int, bw: float) -> None:
+        """Drift node ``j``'s uplink: future ETC columns see ``bw``.
+        Committed work keeps its transfer (already in flight)."""
+        node = self.nodes[j]
+        node.spec = dataclasses.replace(node.spec, link_bw=float(bw))
+        self.link_refreshes += 1
+        self.telemetry.count("link_refreshes")
+
+    # -- admission --------------------------------------------------------
+    def on_arrivals(self, tasks: Sequence[sch.Task], now: float = 0.0
+                    ) -> list[sch.Assignment]:
+        """Place an arriving batch (all tasks have arrival time ``now``).
+
+        One ETC row per task, then min-min rounds over the masked finish
+        matrix (or HEFT ranking); every placement refreshes only the
+        placed node's column.  Returns the new assignments in placement
+        order.
+        """
+        tasks = list(tasks)
+        if not tasks:
+            return []
+        etc = self.etc_rows(tasks)
+        placed: list[sch.Assignment] = []
+        self.telemetry.count("replans")
+        if self.policy == "heft":
+            order = np.argsort(-etc.mean(axis=1))
+            for i in order:
+                j = int(np.argmin(np.maximum(self.avail, now) + etc[i]))
+                start = float(np.maximum(self.avail[j], now))
+                finish = start + float(etc[i, j])
+                self.avail[j] = finish
+                placed.append(self._commit(tasks[int(i)], j, start,
+                                           finish, float(etc[i, j])))
+            return placed
+        fin = np.maximum(self.avail, now)[None, :] + etc
+        active = np.ones(len(tasks), bool)
+        for _ in range(len(tasks)):
+            i, j = sch.masked_argmin(fin, active)
+            start = float(np.maximum(self.avail[j], now))
+            finish = float(fin[i, j])
+            self.avail[j] = fin[i, j]
+            active[i] = False
+            fin[:, j] = np.maximum(self.avail[j], now) + etc[:, j]
+            self.column_refreshes += 1
+            self.telemetry.count("column_refreshes")
+            placed.append(self._commit(tasks[i], j, start, finish,
+                                       float(etc[i, j])))
+        return placed
+
+    def _commit(self, task: sch.Task, j: int, start: float, finish: float,
+                etc_tj: float) -> sch.Assignment:
+        a = sch.Assignment(task, self.nodes[j].spec.name, start, finish)
+        self.assignments.append(a)
+        self._node_of[id(a)] = j
+        self._etc_of[id(a)] = etc_tj
+        return a
+
+    # -- node-free events -------------------------------------------------
+    def node_index(self, a: sch.Assignment) -> int:
+        """Node index an assignment currently sits on (spec names may
+        repeat across nodes, so the name alone is not enough)."""
+        return self._node_of[id(a)]
+
+    def on_node_free(self, j: int, now: float
+                     ) -> Optional[sch.Assignment]:
+        """A task on node ``j`` just finished.  With ``rebalance=True``,
+        try migrating the tail (last queued, not-yet-started) assignment
+        of the most backlogged other node onto ``j`` when that strictly
+        improves its finish; returns the migrated assignment (whose
+        ``node``/``start``/``finish`` were updated in place), else
+        ``None``."""
+        if not self.rebalance:
+            return None
+        tails: dict[int, sch.Assignment] = {}
+        for a in self.assignments:
+            k = self._node_of[id(a)]
+            if k != j and a.start > now and a.finish == self.avail[k]:
+                tails[k] = a
+        if not tails:
+            return None
+        k = max(tails, key=lambda k_: self.avail[k_])
+        a = tails[k]
+        etc_new = float(self.etc_rows([a.task])[0, j])
+        start = float(np.maximum(self.avail[j], now))
+        finish = start + etc_new
+        if finish >= a.finish:
+            return None
+        self.avail[k] = a.start          # contiguous queue: tail pops off
+        self.avail[j] = finish
+        a.node = self.nodes[j].spec.name
+        a.start, a.finish = start, finish
+        self._node_of[id(a)] = j
+        self._etc_of[id(a)] = etc_new
+        self.migrations += 1
+        self.telemetry.count("migrations")
+        return a
+
+    # -- conveniences -----------------------------------------------------
+    def run(self, tasks: Sequence[sch.Task], arrivals) -> sch.Schedule:
+        """Admit ``tasks`` at their ``arrivals`` times (batching ties)
+        without the full event loop — the benchmark / equivalence path."""
+        arrivals = np.asarray(arrivals, np.float64)
+        if arrivals.shape != (len(tasks),):
+            raise ValueError(
+                f"arrivals must be [{len(tasks)}], got {arrivals.shape}")
+        for t, batch in _batches_by_arrival(arrivals):
+            self.on_arrivals([tasks[i] for i in batch], t)
+        return self.schedule()
+
+    def schedule(self) -> sch.Schedule:
+        return sch.Schedule(list(self.assignments))
+
+
+# --------------------------------------------------------------------------
+# The event loop
+# --------------------------------------------------------------------------
+LayersFor = Union[Sequence, Callable[[sch.Task], Sequence]]
+
+
+def simulate_stream(tasks: Sequence[sch.Task], arrivals,
+                    nodes: Sequence[sch.Node], *,
+                    policy: str = "min_min", cost=None,
+                    links: Optional[ClusterLinks] = None,
+                    link_update_dt: float = 1.0,
+                    split_planner=None,
+                    split_env: Optional[DriftingEnv] = None,
+                    split_layers: Optional[LayersFor] = None,
+                    rebalance: bool = False,
+                    telemetry: Optional[Telemetry] = None) -> Telemetry:
+    """Run the full event-driven streaming simulation.
+
+    Events, in virtual-time order with FIFO ties:
+
+      * ``arrive``  — admit the batch of tasks arriving at that instant
+                      through the incremental :class:`StreamScheduler`
+                      (and, when a ``split_planner`` rides along, admit
+                      each task's offload split against the current
+                      ``split_env`` link observation)
+      * ``finish``  — a task completes: record telemetry, free the node
+                      (possibly migrating a queued task onto it), close
+                      the task's split plan
+      * ``link``    — every ``link_update_dt`` seconds of virtual time,
+                      drift the per-node uplinks (``links``) and the
+                      device↔edge environment (``split_env``), refresh
+                      only the affected ETC columns, and let the split
+                      planner re-pick along the live Pareto fronts
+
+    Returns the filled :class:`Telemetry` (the scheduler's counters and
+    one :class:`TaskRecord` per task).
+    """
+    telemetry = telemetry if telemetry is not None else Telemetry()
+    if split_planner is not None:
+        if split_env is None or split_layers is None:
+            raise ValueError("split_planner needs split_env= and "
+                             "split_layers= (shared list or task -> "
+                             "layers)")
+        split_planner.telemetry = telemetry    # one record per run
+
+    def layers_for(task: sch.Task):
+        if callable(split_layers):
+            return split_layers(task)
+        return split_layers
+
+    sched = StreamScheduler(nodes, policy=policy, cost=cost,
+                            rebalance=rebalance, telemetry=telemetry)
+    arrivals = np.asarray(arrivals, np.float64)
+    if arrivals.shape != (len(tasks),):
+        raise ValueError(
+            f"arrivals must be [{len(tasks)}], got {arrivals.shape}")
+
+    q = EventQueue()
+    for t, batch in _batches_by_arrival(arrivals):
+        q.push(t, "arrive", batch)
+    drifting = (links is not None or split_env is not None) \
+        and link_update_dt > 0
+    if drifting:
+        q.push(link_update_dt, "link", None)
+
+    to_arrive = len(tasks)
+    live: dict[int, sch.Assignment] = {}         # rid -> assignment
+    rid_of: dict[int, int] = {}                  # id(assignment) -> rid
+    completed: set[int] = set()                  # id(assignment)
+
+    while q:
+        ev = q.pop()
+        now = ev.time
+        if ev.kind == "arrive":
+            batch = [tasks[i] for i in ev.payload]
+            # map task objects back to their global indices (pick order
+            # of the placements differs from input order)
+            slots: dict[int, list[int]] = {}
+            for rid, task in zip(ev.payload, batch):
+                slots.setdefault(id(task), []).append(rid)
+            placed = sched.on_arrivals(batch, now)
+            to_arrive -= len(batch)
+            for a in placed:
+                rid = slots[id(a.task)].pop(0)
+                live[rid] = a
+                rid_of[id(a)] = rid
+                q.push(a.finish, "finish", a)
+                if split_planner is not None:
+                    split_planner.admit(
+                        rid, layers_for(a.task), split_env.link_bw,
+                        input_bytes=a.task.input_bytes, now=now,
+                        deadline_s=a.task.deadline_s)
+        elif ev.kind == "finish":
+            a = ev.payload
+            if id(a) in completed or a.finish != now:
+                continue                         # stale (migrated) event
+            completed.add(id(a))
+            rid = rid_of[id(a)]
+            j = sched.node_index(a)
+            split, switches = None, 0
+            if split_planner is not None:
+                rec = split_planner.complete(rid, split_env.link_bw,
+                                             now=now)
+                split, switches = rec["pick"], rec["switches"]
+            telemetry.complete(TaskRecord(
+                name=a.task.name, arrived_s=float(arrivals[rid]),
+                started_s=a.start, finished_s=a.finish, node=a.node,
+                node_id=j, deadline_s=a.task.deadline_s,
+                energy_j=(a.finish - a.start)
+                * sched.nodes[j].spec.tdp_watts,
+                split=split, switches=switches))
+            del live[rid]
+            migrated = sched.on_node_free(j, now)
+            if migrated is not None:
+                q.push(migrated.finish, "finish", migrated)
+        elif ev.kind == "link":
+            if links is not None:
+                prev = links.values()
+                bws = links.step(link_update_dt)
+                for j in np.flatnonzero(bws != prev):
+                    sched.set_link_bw(int(j), float(bws[j]))
+            if split_env is not None:
+                split_env.step(link_update_dt)
+                if split_planner is not None:
+                    split_planner.on_link(split_env.link_bw, now=now)
+            if to_arrive > 0 or live:
+                q.push(now + link_update_dt, "link", None)
+    return telemetry

@@ -1,0 +1,537 @@
+"""repro.sim test lanes.
+
+Fast lane: equivalence pins (streaming at t=0/static links is bit-for-bit
+the batch schedulers; ``decisions.replan`` splices rows bit-for-bit),
+hypothesis properties (no task starts before its arrival; Pareto re-picks
+stay on the current non-dominated front; streaming deadline misses match
+the batch ``Schedule.deadline_misses``), and a deterministic-seed
+end-to-end smoke (≤5 s).  Tier-1 adds the slow diurnal/Pareto run.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis_shim import given, settings, st
+
+from repro import sim
+from repro.core import costs as co
+from repro.core import decisions as dec
+from repro.core import offload as off
+from repro.core import scheduler as sch
+from repro.core.workloads import WorkloadConfig
+from repro.hw import EDGE_DEVICES, get_device
+
+
+def make_tasks(n, seed=3, deadlines=False):
+    rng = np.random.default_rng(seed)
+    return [sch.Task(f"t{i}", flops=float(rng.uniform(1e9, 5e11)),
+                     input_bytes=float(rng.uniform(1e4, 1e7)),
+                     deadline_s=float(rng.uniform(0.02, 2.0))
+                     if deadlines else None)
+            for i in range(n)]
+
+
+def make_nodes(n=None):
+    specs = list(EDGE_DEVICES.values())
+    n = n or len(specs)
+    return [sch.Node(specs[j % len(specs)]) for j in range(n)]
+
+
+@pytest.fixture(scope="module")
+def cnn_layers():
+    wc = WorkloadConfig("cnn", 2, epochs=5, optimiser="adam", lr=1e-3,
+                        batch_size=32)
+    return off.workload_layer_costs(wc)
+
+
+# --------------------------------------------------------------------------
+# events: clock, queue, arrival processes
+# --------------------------------------------------------------------------
+def test_clock_monotonic():
+    c = sim.Clock()
+    assert c.advance(1.5) == 1.5
+    assert c.advance_to(1.0) == 1.5          # never backwards
+    assert c.advance_to(2.0) == 2.0
+    with pytest.raises(ValueError):
+        c.advance(-0.1)
+
+
+def test_event_queue_orders_by_time_fifo_on_ties():
+    q = sim.EventQueue()
+    q.push(2.0, "b")
+    q.push(1.0, "a1")
+    q.push(1.0, "a2")
+    assert q.peek_time() == 1.0
+    kinds = [q.pop().kind for _ in range(3)]
+    assert kinds == ["a1", "a2", "b"]
+    assert not q
+
+
+@pytest.mark.parametrize("gen", [
+    lambda s: sim.poisson_arrivals(20.0, n=50, seed=s),
+    lambda s: sim.poisson_arrivals(20.0, horizon=2.0, seed=s),
+    lambda s: sim.mmpp_arrivals([5.0, 80.0], [0.5, 0.2], horizon=2.0,
+                                seed=s),
+    lambda s: sim.diurnal_arrivals(30.0, horizon=2.0, amplitude=0.8,
+                                   period_s=1.0, seed=s),
+])
+def test_arrival_processes_sorted_and_deterministic(gen):
+    a, b = gen(7), gen(7)
+    np.testing.assert_array_equal(a, b)      # seeded: exact replay
+    assert (np.diff(a) >= 0).all()
+    assert (a >= 0).all()
+    assert a.size > 0
+
+
+def test_arrival_horizon_respected():
+    a = sim.poisson_arrivals(100.0, horizon=1.5, seed=0)
+    assert (a < 1.5).all()
+    d = sim.diurnal_arrivals(50.0, horizon=1.0, seed=1)
+    assert (d < 1.0).all()
+
+
+def test_trace_arrivals_validates():
+    np.testing.assert_array_equal(sim.trace_arrivals([0.0, 1.0, 1.0, 2.5]),
+                                  [0.0, 1.0, 1.0, 2.5])
+    with pytest.raises(ValueError):
+        sim.trace_arrivals([1.0, 0.5])       # unsorted
+    with pytest.raises(ValueError):
+        sim.trace_arrivals([-1.0, 0.5])      # negative
+
+
+def test_poisson_needs_exactly_one_bound():
+    with pytest.raises(ValueError):
+        sim.poisson_arrivals(1.0, seed=0)
+    with pytest.raises(ValueError):
+        sim.poisson_arrivals(1.0, n=5, horizon=1.0, seed=0)
+
+
+# --------------------------------------------------------------------------
+# state: link processes + EnvArrays snapshots
+# --------------------------------------------------------------------------
+def test_link_processes_bounded_and_deterministic():
+    w1 = sim.RandomWalkLink(1e8, sigma=1.0, min_bw=1e6, max_bw=1e9, seed=4)
+    w2 = sim.RandomWalkLink(1e8, sigma=1.0, min_bw=1e6, max_bw=1e9, seed=4)
+    for _ in range(50):
+        v = w1.step(0.5)
+        assert v == w2.step(0.5)             # same seed, same path
+        assert 1e6 <= v <= 1e9 + 1e-6
+    g = sim.TwoStateLink(1.25e9, 2e6, mean_good_s=0.5, mean_bad_s=0.5,
+                         seed=1)
+    seen = {g.value}
+    for _ in range(100):
+        seen.add(g.step(0.3))
+    assert seen == {1.25e9, 2e6}             # Gilbert–Elliott: two states
+    d = sim.DiurnalLink(1e8, amplitude=0.5, period_s=1.0)
+    vals = [d.step(0.05) for _ in range(40)]
+    assert max(vals) <= 1.5e8 + 1e-6 and min(vals) >= 0.5e8 - 1e-6
+    assert max(vals) > 1.2e8 and min(vals) < 0.8e8   # actually tides
+
+
+def test_drifting_env_snapshot_feeds_decide_all(cnn_layers):
+    env = sim.DriftingEnv(device=get_device("pi5-arm"),
+                          edge=get_device("edge-server-a100"),
+                          link=sim.FixedLink(0.125e9),
+                          input_bytes=4 * 32 * 784)
+    snap = env.snapshot()
+    ref = dec.make_envs(env.device, env.edge, link_bw=np.asarray([0.125e9]),
+                        link_latency_s=0.005,
+                        input_bytes=np.asarray([4 * 32 * 784.0]))
+    np.testing.assert_array_equal(snap.link_bw, ref.link_bw)
+    np.testing.assert_array_equal(snap.input_bytes, ref.input_bytes)
+    # the batch core consumes the snapshot unchanged, and agrees with the
+    # scalar oracle on the frozen state
+    plan = dec.decide_all(cnn_layers, snap)
+    scalar = off.optimal_split(cnn_layers, off.OffloadEnv(
+        env.device, env.edge, 0.125e9, input_bytes=4 * 32 * 784))
+    assert int(plan.splits[0]) == scalar.split
+    np.testing.assert_allclose(plan.total_time_s[0], scalar.total_time_s,
+                               rtol=1e-15)
+
+
+# --------------------------------------------------------------------------
+# equivalence pins: streaming at t=0 / static links == batch, bit-for-bit
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("policy,batch_fn", [("min_min", sch.min_min),
+                                             ("heft", sch.heft)])
+def test_stream_t0_static_matches_batch_bitforbit(policy, batch_fn):
+    tasks, nodes = make_tasks(23), make_nodes()
+    etc = sch.etc_matrix(tasks, nodes)
+    batch = batch_fn(tasks, nodes, etc)
+    stream = sim.StreamScheduler(nodes, policy=policy)
+    out = stream.run(tasks, np.zeros(len(tasks)))
+    assert len(out.assignments) == len(batch.assignments)
+    for a, b in zip(batch.assignments, out.assignments):
+        assert a.task is b.task
+        assert a.node == b.node
+        assert a.start == b.start            # bit-for-bit, no tolerance
+        assert a.finish == b.finish
+    assert out.makespan == batch.makespan
+    assert stream.full_rebuilds == 0
+
+
+def test_stream_incremental_work_is_per_arrival():
+    """Staggered arrivals: one ETC row per task, one column refresh per
+    placement, never a full rebuild."""
+    tasks, nodes = make_tasks(17), make_nodes()
+    arr = sim.poisson_arrivals(50.0, n=len(tasks), seed=2)
+    s = sim.StreamScheduler(nodes)
+    out = s.run(tasks, arr)
+    assert len(out.assignments) == len(tasks)
+    assert s.rows_built == len(tasks)
+    assert s.column_refreshes == len(tasks)
+    assert s.full_rebuilds == 0
+    starts = {a.task.name: a.start for a in out.assignments}
+    for t, a in zip(tasks, arr):
+        assert starts[t.name] >= a
+
+
+def test_set_link_bw_refreshes_future_etc_columns():
+    tasks, nodes = make_tasks(1), make_nodes()
+    s = sim.StreamScheduler(nodes)
+    before = s.etc_rows(tasks)[0]
+    s.set_link_bw(0, 1.0)                    # node 0's uplink collapses
+    after = s.etc_rows(tasks)[0]
+    assert after[0] > before[0] * 100
+    np.testing.assert_array_equal(after[1:], before[1:])
+    assert s.link_refreshes == 1
+
+
+def test_stream_rejects_unknown_policy_and_bad_arrivals():
+    nodes = make_nodes()
+    with pytest.raises(ValueError):
+        sim.StreamScheduler(nodes, policy="fifo")
+    with pytest.raises(ValueError):
+        sim.StreamScheduler(nodes).run(make_tasks(3), [0.0, 1.0])
+
+
+# --------------------------------------------------------------------------
+# incremental decisions.replan
+# --------------------------------------------------------------------------
+def synth_layers(L, seed=0):
+    rng = np.random.default_rng(seed)
+    return [off.LayerCost(f"l{i}", flops=float(rng.uniform(1e8, 1e11)),
+                          act_bytes=float(rng.uniform(1e3, 1e7)))
+            for i in range(L)]
+
+
+@pytest.mark.parametrize("cost", [
+    None,
+    co.CompositeCost(weights={"latency_s": 1.0, "energy_j": 0.05,
+                              "price": 1.0},
+                     price_per_edge_s=0.1, price_per_gb=0.01),
+])
+def test_replan_changed_rows_bitforbit(cost):
+    layers = synth_layers(24)
+    bws = np.geomspace(1e5, 1e10, 64)
+    envs = dec.make_envs(get_device("pi5-arm"),
+                         get_device("edge-server-a100"), link_bw=bws,
+                         input_bytes=1e5)
+    prev = dec.decide_all(layers, envs, cost=cost)
+    bws2 = bws.copy()
+    changed = np.zeros(64, bool)
+    changed[[3, 17, 40, 63]] = True
+    bws2[changed] *= 0.01                    # those links degraded
+    envs2 = dec.make_envs(get_device("pi5-arm"),
+                          get_device("edge-server-a100"), link_bw=bws2,
+                          input_bytes=1e5)
+    inc = dec.replan(layers, envs2, prev, changed, cost=cost)
+    full = dec.decide_all(layers, envs2, cost=cost)
+    np.testing.assert_array_equal(inc.splits, full.splits)
+    np.testing.assert_array_equal(inc.total_time_s, full.total_time_s)
+    np.testing.assert_array_equal(inc.device_time_s, full.device_time_s)
+    np.testing.assert_array_equal(inc.transfer_time_s,
+                                  full.transfer_time_s)
+    np.testing.assert_array_equal(inc.edge_time_s, full.edge_time_s)
+    if cost is not None:
+        np.testing.assert_array_equal(inc.components, full.components)
+        np.testing.assert_array_equal(inc.scalar_cost, full.scalar_cost)
+    # no changed rows -> the previous plan comes back untouched
+    assert dec.replan(layers, envs2, inc, np.zeros(64, bool),
+                      cost=cost) is inc
+
+
+def test_replan_guards():
+    layers = synth_layers(8)
+    envs = dec.make_envs(get_device("pi5-arm"),
+                         get_device("edge-server-a100"),
+                         link_bw=np.geomspace(1e6, 1e9, 16),
+                         input_bytes=1e5)
+    prev = dec.decide_all(layers, envs)
+    with pytest.raises(ValueError):          # wrong mask shape
+        dec.replan(layers, envs, prev, np.zeros(4, bool))
+    comp = co.CompositeCost()
+    with pytest.raises(ValueError):          # objective stack changed
+        dec.replan(layers, envs, prev, np.asarray([0, 1]), cost=comp)
+
+
+# --------------------------------------------------------------------------
+# pareto_pick + ParetoStreamScheduler
+# --------------------------------------------------------------------------
+def test_pareto_pick_is_front_restricted_scalar_argmin():
+    rng = np.random.default_rng(0)
+    comp = rng.uniform(0.0, 1.0, size=(5, 12, 3))
+    names = ("latency_s", "energy_j", "price")
+    w = {"latency_s": 1.0, "energy_j": 0.0, "price": 0.0}
+    front, picks = co.pareto_pick(comp, names, w)
+    scalar = co.scalarize_weighted(comp, names, w)
+    for e in range(5):
+        assert front[e, picks[e]]            # every pick non-dominated
+        on_front = np.flatnonzero(front[e])
+        assert scalar[e, picks[e]] == scalar[e, on_front].min()
+    with pytest.raises(KeyError):
+        co.pareto_pick(comp, names, w, subset=("latency_s", "typo"))
+    # a precomputed ranking matrix (a model's own scalarize) overrides
+    # the weighted sum and must match the component shape
+    _, picks2 = co.pareto_pick(comp, names, scalar=scalar)
+    for e in range(5):
+        assert front[e, picks2[e]]
+    with pytest.raises(ValueError):
+        co.pareto_pick(comp, names, scalar=scalar[:, :4])
+
+
+def test_pareto_stream_scheduler_lifecycle(cnn_layers):
+    pl = sim.ParetoStreamScheduler(device=get_device("pi5-arm"),
+                                   edge=get_device("edge-server-a100"))
+    st0 = pl.admit(0, cnn_layers, 1.25e9, input_bytes=1e5)
+    assert st0.front_size >= 1
+    assert 0 <= st0.pick <= len(cnn_layers)
+    with pytest.raises(KeyError):
+        pl.admit(0, cnn_layers, 1.25e9)      # rid already live
+    # a collapsing link must eventually pull the pick toward local-only
+    switched = pl.on_link(10.0)
+    assert pl.live[0].pick == len(cnn_layers)
+    assert switched in (0, 1)
+    rec = pl.complete(0, 10.0)
+    assert rec["pick"] == len(cnn_layers)
+    assert rec["switches"] == pl.total_switches
+    assert not pl.live
+    assert set(rec["realised"]) == set(pl.cost.objectives)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 8), st.integers(1, 5))
+def test_pareto_repick_stays_on_current_front(seed, n_layers, n_events):
+    """Per-event re-picks are non-dominated on the *current* front,
+    verified independently of the scheduler's own mask."""
+    layers = synth_layers(n_layers, seed=seed)
+    cost = co.CompositeCost(weights={"latency_s": 1.0, "energy_j": 0.02,
+                                     "price": 1.0},
+                            price_per_edge_s=0.1, price_per_gb=0.05)
+    pl = sim.ParetoStreamScheduler(cost, device=get_device("pi5-arm"),
+                                   edge=get_device("edge-server-a100"))
+    link = sim.RandomWalkLink(0.125e9, sigma=1.5, seed=seed + 1)
+    pl.admit(0, layers, link.value, input_bytes=1e5)
+    pl.admit(1, layers, link.value, input_bytes=3e6)
+    obj_idx = [cost.objectives.index(n) for n in pl.pareto_objectives]
+    for _ in range(n_events):
+        bw = link.step(1.0)
+        pl.on_link(bw)
+        for state in pl.live.values():
+            envs = dec.make_envs(pl.device, pl.edge,
+                                 link_bw=np.asarray([bw]),
+                                 link_latency_s=pl.link_latency_s,
+                                 input_bytes=np.asarray(
+                                     [state.input_bytes]))
+            comp = np.asarray(cost.components(layers, envs))[0]
+            front = co.pareto_front(comp[:, obj_idx])
+            assert front[state.pick]
+
+
+# --------------------------------------------------------------------------
+# streaming invariants + telemetry vs the batch world
+# --------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 14), st.integers(1, 5),
+       st.booleans())
+def test_no_task_starts_before_arrival(seed, n_tasks, n_nodes, rebalance):
+    rng = np.random.default_rng(seed)
+    tasks = make_tasks(n_tasks, seed=seed)
+    nodes = make_nodes(n_nodes)
+    arrivals = np.sort(rng.uniform(0.0, 2.0, size=n_tasks))
+    links = sim.ClusterLinks.random_walk(
+        [n.spec.link_bw for n in nodes], sigma=0.6, seed=seed)
+    tel = sim.simulate_stream(tasks, arrivals, nodes, links=links,
+                              link_update_dt=0.25, rebalance=rebalance)
+    assert len(tel) == n_tasks
+    for r in tel.records:
+        assert r.started_s >= r.arrived_s
+        assert r.finished_s > r.started_s
+        assert r.energy_j >= 0.0
+
+
+def test_stream_deadline_misses_match_batch():
+    """Telemetry's miss count on the t=0/static problem equals the batch
+    ``Schedule.deadline_misses`` — the metric is the same quantity."""
+    tasks, nodes = make_tasks(25, deadlines=True), make_nodes()
+    etc = sch.etc_matrix(tasks, nodes)
+    batch = sch.min_min(tasks, nodes, etc)
+    assert batch.deadline_misses() > 0       # a meaningful pin
+    tel = sim.simulate_stream(tasks, np.zeros(len(tasks)), nodes)
+    assert tel.deadline_misses == batch.deadline_misses()
+    fin_batch = {a.task.name: a.finish for a in batch.assignments}
+    for r in tel.records:
+        assert r.finished_s == fin_batch[r.name]
+    s = tel.summary()
+    assert s["deadline_misses"] == batch.deadline_misses()
+    assert s["makespan_s"] == batch.makespan
+
+
+def test_telemetry_rows_match_results_schema(tmp_path):
+    tel = sim.Telemetry()
+    tel.complete(sim.TaskRecord("a", 0.0, 0.5, 2.0, node="n0",
+                                deadline_s=1.0, energy_j=3.0))
+    tel.complete(sim.TaskRecord("b", 0.0, 2.0, 3.0, node="n1"))
+    rows = tel.to_rows("unit")
+    assert rows[0]["name"] == "unit"
+    assert rows[0]["deadline_misses"] == 1
+    assert all(isinstance(r, dict) and "name" in r for r in rows)
+    path = tmp_path / "rows.json"
+    tel.save(str(path), "unit")
+    import json
+    assert json.loads(path.read_text())[0]["n_tasks"] == 2
+    util = tel.utilisation()
+    assert all(0.0 <= u <= 1.0 for u in util.values())
+
+
+def test_utilisation_keeps_same_spec_nodes_apart():
+    """Clusters repeat device specs; utilisation must key on node
+    identity, not the (non-unique) spec name — merging same-named nodes
+    used to report busy fractions > 1."""
+    tel = sim.Telemetry()
+    for nid in range(3):                     # three xps15-i5 nodes, each
+        tel.complete(sim.TaskRecord(f"t{nid}", 0.0, 0.0, 10.0,
+                                    node="xps15-i5", node_id=nid))
+    util = tel.utilisation()
+    assert len(util) == 3
+    assert set(util) == {"xps15-i5@0", "xps15-i5@1", "xps15-i5@2"}
+    assert all(u == 1.0 for u in util.values())
+    assert tel.summary()["mean_utilisation"] == 1.0
+    # a full sim over a duplicate-spec cluster stays within [0, 1]
+    spec = get_device("xps15-i5")
+    nodes = [sch.Node(spec) for _ in range(4)]
+    tel2 = sim.simulate_stream(make_tasks(12), np.zeros(12), nodes)
+    assert all(0.0 <= u <= 1.0 for u in tel2.utilisation().values())
+    assert 0.0 <= tel2.summary()["mean_utilisation"] <= 1.0
+
+
+def test_rebalance_migrates_queue_tail_onto_freed_node():
+    """Link drift between placement and node-free makes migration pay:
+    a queued-but-unstarted tail moves onto the freed node when its link
+    recovered, strictly improving that task's finish."""
+    a100 = get_device("edge-server-a100")
+    nodes = [sch.Node(dataclasses.replace(a100, name="n0")),
+             sch.Node(dataclasses.replace(a100, name="n1"))]
+    s = sim.StreamScheduler(nodes, rebalance=True)
+    big = sch.Task("big", flops=5e12, input_bytes=1e5)
+    (a_big,) = s.on_arrivals([big], 0.0)
+    assert s.node_index(a_big) == 0          # tie-break: first node
+    s.set_link_bw(0, 1.0)                    # n0's uplink collapses...
+    (a_q1,) = s.on_arrivals([sch.Task("q1", flops=5e12,
+                                      input_bytes=1e5)], 0.01)
+    (a_q2,) = s.on_arrivals([sch.Task("q2", flops=1e11,
+                                      input_bytes=1e5)], 0.02)
+    assert s.node_index(a_q1) == 1 and s.node_index(a_q2) == 1
+    assert a_q2.start > a_big.finish         # q2 queued behind q1
+    s.set_link_bw(0, a100.link_bw)           # ...and recovers in time
+    old_finish = a_q2.finish
+    migrated = s.on_node_free(0, now=a_big.finish)
+    assert migrated is a_q2
+    assert s.node_index(a_q2) == 0
+    assert a_q2.finish < old_finish          # strictly better, or no move
+    assert s.migrations == 1
+    # no further candidate: the remaining tail started already
+    assert s.on_node_free(0, now=a_q2.finish) is None
+
+
+# --------------------------------------------------------------------------
+# end-to-end: deterministic smoke (fast) + the full diurnal run (slow)
+# --------------------------------------------------------------------------
+def _smoke_run(seed):
+    tasks = make_tasks(50, seed=seed, deadlines=True)
+    nodes = make_nodes()
+    arrivals = sim.mmpp_arrivals([20.0, 200.0], [0.4, 0.1], horizon=2.0,
+                                 seed=seed)[:len(tasks)]
+    tasks = tasks[:len(arrivals)]
+    links = sim.ClusterLinks.random_walk(
+        [n.spec.link_bw for n in nodes], sigma=0.5, seed=seed + 1)
+    wc = WorkloadConfig("cnn", 2, epochs=5, optimiser="adam", lr=1e-3,
+                        batch_size=32)
+    layers = off.workload_layer_costs(wc)
+    env = sim.DriftingEnv(device=get_device("pi5-arm"),
+                          edge=get_device("edge-server-a100"),
+                          link=sim.TwoStateLink(1.25e9, 2e5,
+                                                mean_good_s=0.4,
+                                                mean_bad_s=0.4,
+                                                seed=seed + 2),
+                          input_bytes=1e5)
+    planner = sim.ParetoStreamScheduler(device=get_device("pi5-arm"),
+                                        edge=get_device(
+                                            "edge-server-a100"))
+    tel = sim.simulate_stream(tasks, arrivals, nodes, links=links,
+                              link_update_dt=0.1, split_planner=planner,
+                              split_env=env, split_layers=layers)
+    recs = tuple((r.name, r.arrived_s, r.started_s, r.finished_s, r.node,
+                  r.split, r.switches) for r in tel.records)
+    return tel.summary(), recs
+
+
+def test_sim_smoke_deterministic_seed():
+    """Full event loop (MMPP arrivals, drifting cluster links, Pareto
+    split planner) replays exactly under one seed — the fast-lane smoke."""
+    (s1, r1), (s2, r2) = _smoke_run(0), _smoke_run(0)
+    assert s1 == s2
+    assert r1 == r2
+    assert s1["n_tasks"] == len(r1) > 0
+    assert s1["p99_completion_s"] >= s1["p50_completion_s"] >= 0.0
+    assert s1["replans"] > 0 and s1["column_refreshes"] > 0
+    assert "full_rebuilds" not in s1         # never counted: never done
+
+
+@pytest.mark.slow
+def test_sim_end_to_end_diurnal_pareto_slow():
+    """The committed-example scenario at full size: diurnal arrivals,
+    drifting links, Pareto re-picking.  The planner must actually switch
+    splits under the drifting link, and every record must respect the
+    streaming invariants."""
+    rng = np.random.default_rng(0)
+    n = 300
+    tasks = [sch.Task(f"t{i}", flops=float(rng.uniform(5e10, 8e11)),
+                      input_bytes=float(rng.uniform(1e5, 1e7)),
+                      deadline_s=float(rng.uniform(5, 120)))
+             for i in range(n)]
+    nodes = make_nodes()
+    arrivals = sim.diurnal_arrivals(12.0, horizon=30.0, amplitude=0.9,
+                                    period_s=10.0, seed=1)[:n]
+    tasks = tasks[:len(arrivals)]
+    links = sim.ClusterLinks.random_walk(
+        [nd.spec.link_bw for nd in nodes], sigma=0.7, seed=2)
+    wc = WorkloadConfig("cnn", 2, epochs=5, optimiser="adam", lr=1e-3,
+                        batch_size=32)
+    layers = off.workload_layer_costs(wc)
+    env = sim.DriftingEnv(device=get_device("pi5-arm"),
+                          edge=get_device("edge-server-a100"),
+                          link=sim.TwoStateLink(1.25e9, 2e5,
+                                                mean_good_s=2.0,
+                                                mean_bad_s=2.0, seed=3),
+                          input_bytes=1e5)
+    # the pi5 → A100 pair keeps a multi-point front (a fast local device
+    # collapses it to local-only and nothing would ever switch)
+    planner = sim.ParetoStreamScheduler(device=get_device("pi5-arm"),
+                                        edge=get_device(
+                                            "edge-server-a100"))
+    tel = sim.simulate_stream(tasks, arrivals, nodes, policy="min_min",
+                              links=links, link_update_dt=0.5,
+                              split_planner=planner, split_env=env,
+                              split_layers=layers, rebalance=True)
+    assert len(tel) == len(tasks)
+    for r in tel.records:
+        assert r.started_s >= r.arrived_s
+        assert r.finished_s > r.started_s
+    # drifting two-state link MUST move the picks at least once
+    assert planner.total_switches >= 1
+    s = tel.summary()
+    assert s["split_switches"] >= 1
+    assert s["split_repicks"] > 0
+    assert 0.0 <= s["mean_utilisation"] <= 1.0
+    assert tel.makespan_s >= float(arrivals.max())

@@ -139,6 +139,7 @@ def test_continuous_engine_replans_offload_per_admission():
     for r, bw in zip(sorted(done, key=lambda r: r.rid),
                      [1.25e9, 1.25e9, 0.125e9 / 64, 0.125e9 / 64]):
         assert r.offload is not None
+        assert r.admitted_at >= r.arrived_at
         layers = transformer_layer_costs(cfg, len(r.prompt), 1)
         envs = make_envs(device, edge, link_bw=np.asarray([bw]),
                          input_bytes=4.0 * len(r.prompt))
@@ -146,3 +147,45 @@ def test_continuous_engine_replans_offload_per_admission():
         assert r.offload.split == expect.split
         np.testing.assert_allclose(r.offload.total_time_s,
                                    expect.total_time_s, rtol=1e-12)
+
+
+def test_continuous_engine_honours_arrival_clock():
+    """Regression: serve() used to admit a request the moment a slot
+    freed, ignoring ``arrived_at``.  The engine now threads virtual time
+    (decode steps × step latency, idle jumps to the next arrival) and
+    never admits a request before it arrives."""
+    from repro.sim.events import Clock
+    from repro.serve.continuous import ContinuousBatchEngine
+    cfg = reduced_config("qwen3-1.7b").replace(dtype="float32")
+    clock = Clock()
+    eng = ContinuousBatchEngine(cfg, slots=2, max_len=48, seed=3,
+                                clock=clock, step_latency_s=5e-3)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in (5, 7, 6)]
+    # r1 arrives while r0 decodes; r2 arrives long after the engine idles
+    reqs = [Request(rid=0, prompt=prompts[0], max_new_tokens=4,
+                    arrived_at=0.0),
+            Request(rid=1, prompt=prompts[1], max_new_tokens=4,
+                    arrived_at=0.012),
+            Request(rid=2, prompt=prompts[2], max_new_tokens=4,
+                    arrived_at=10.0)]
+    done = eng.serve(reqs)
+    assert len(done) == 3
+    by = {r.rid: r for r in done}
+    # the invariant the bug violated: no admission before arrival
+    assert all(r.admitted_at >= r.arrived_at for r in done)
+    assert by[0].admitted_at == 0.0
+    # r1 had a free slot from t=0 but still waits for its arrival, then
+    # is admitted within a step of it
+    assert by[1].admitted_at <= 0.012 + 2 * eng.step_latency_s
+    # idle engine jumps the clock to the next arrival, not before
+    assert by[2].admitted_at == 10.0
+    assert clock.now >= 10.0
+    # outputs stay exactly the static greedy reference despite the gaps
+    ref = ServeEngine(cfg, batch_size=1, max_len=48, seed=0)
+    ref.params = eng.params
+    for r in done:
+        np.testing.assert_array_equal(
+            r.output, ref.generate_batch(r.prompt[None],
+                                         r.max_new_tokens)[0])
