@@ -185,14 +185,19 @@ ACCEL_OBJECTIVES = ("latency_s", "energy_j", "price", "deadline_slack_s")
 
 @dataclasses.dataclass(frozen=True)
 class AccelSpec:
-    """Scalar parameters that fully determine a lowerable cost model.
+    """Parameters that fully determine a lowerable cost model.
 
     The jit/Pallas decision kernels (``repro.kernels.decide_split``)
     evaluate one fixed objective stack — latency, energy, price, deadline
     slack, in :data:`ACCEL_OBJECTIVES` order — and scalarise it with
-    ``weights``; a cost model lowers to the accelerator iff it can be
-    expressed as these few scalars plus the shared ``EnvArrays`` tensors.
-    Latency-only models are the ``weights = (1, 0, 0, 0)`` special case.
+    ``weights``.  Latency-only models are the ``weights = (1, 0, 0, 0)``
+    special case.  *Where* per-layer compute times come from is the
+    ``lowered`` seam: ``None`` means the analytic roofline (``flops /
+    (peak × efficiency)`` from the shared ``EnvArrays`` tensors);
+    otherwise it is a :class:`repro.oracle.lowered.LoweredLayerTimes` —
+    a fitted profiling regressor compiled to array form, whose
+    environment-invariant ``(t_dev, t_edge)`` vectors the kernels turn
+    into cumulative-split times on-device.
     """
     efficiency: float
     weights: tuple[float, float, float, float]
@@ -203,6 +208,9 @@ class AccelSpec:
     #: objective names the resulting DecisionPlan carries (a prefix view
     #: of the canonical stack: just latency, or all four)
     objectives: tuple[str, ...] = ("latency_s",)
+    #: lowered predictor layer-times, or None for the analytic roofline
+    lowered: Optional[object] = dataclasses.field(default=None,
+                                                  compare=False)
 
 
 def lower_to_accel(cost: Optional[CostModel],
@@ -211,11 +219,14 @@ def lower_to_accel(cost: Optional[CostModel],
     cannot run on-accelerator.
 
     ``None`` lowers to the analytic latency-only default at
-    ``efficiency``.  Cost models opt in by exposing ``accel_spec()``
-    (:class:`AnalyticCost`, :class:`CompositeCost` over an analytic base —
-    pure array math).  :class:`PredictorCost` deliberately does not: its
-    ``model.predict`` is arbitrary host Python (trees, sklearn, …), so
-    predictor-driven decisions stay on ``backend="numpy"``.
+    ``efficiency``.  Cost models opt in by exposing ``accel_spec()``:
+    :class:`AnalyticCost` and :class:`CompositeCost` are pure array math
+    over ``EnvArrays``; :class:`PredictorCost` lowers by compiling its
+    fitted regressor to array form (``repro.oracle.lowered`` — ridge →
+    dot, MLP → jitted matmul chain, GBT → flattened node arrays walked
+    by the ``tree_predict`` kernels), and raises ``TypeError`` only when
+    the wrapped model is outside those families (arbitrary host Python
+    — use ``backend='numpy'``).
     """
     if cost is None:
         return AccelSpec(efficiency, (1.0, 0.0, 0.0, 0.0))
@@ -224,9 +235,9 @@ def lower_to_accel(cost: Optional[CostModel],
         raise TypeError(
             f"{type(cost).__name__} does not lower to the accelerator "
             "decision kernels: backend='jax'/'pallas' needs pure array "
-            "math (AnalyticCost, or CompositeCost over an analytic base); "
-            "predictor-driven costs evaluate their regressor host-side — "
-            "use backend='numpy'")
+            "math over EnvArrays or a lowerable fitted regressor "
+            "(AnalyticCost, CompositeCost, PredictorCost over a ridge/"
+            "MLP/GBT model) — use backend='numpy'")
     return fn()
 
 
@@ -319,6 +330,7 @@ class PredictorCost:
     def __post_init__(self):
         self._times_cache: tuple = (None, None)
         self._parts_cache: tuple = (None, None, None)
+        self._accel_cache: tuple = (None, None)
 
     def layer_times(self, layers) -> tuple[np.ndarray, np.ndarray]:
         """Predicted per-layer times ``(device [L], edge [L])`` — one
@@ -357,6 +369,20 @@ class PredictorCost:
 
     def scalarize(self, components: np.ndarray) -> np.ndarray:
         return np.asarray(components)[..., 0]
+
+    def accel_spec(self) -> AccelSpec:
+        """Lower to the accelerator decision kernels by compiling the
+        fitted regressor to array form (``repro.oracle.lowered``);
+        raises ``TypeError`` when the model has no array lowering.
+        Memoised on the model identity so repeated sweeps reuse the
+        compiled form (and its per-layer-set predict memo)."""
+        if self._accel_cache[0] is self.model:
+            return self._accel_cache[1]
+        from repro.oracle.lowered import lower_layer_times
+        spec = AccelSpec(DEFAULT_EFFICIENCY, (1.0, 0.0, 0.0, 0.0),
+                         lowered=lower_layer_times(self))
+        self._accel_cache = (self.model, spec)
+        return spec
 
     def task_matrix(self, tasks, nodes) -> np.ndarray:
         """Predicted ``[T, N]`` expected-time-to-compute matrix for
@@ -437,19 +463,27 @@ class CompositeCost:
         return pareto_front(self.components(layers, envs))
 
     def accel_spec(self) -> AccelSpec:
-        if not isinstance(self.base, AnalyticCost):
+        base_fn = getattr(self.base, "accel_spec", None)
+        if base_fn is None:
             raise TypeError(
                 f"CompositeCost over base {type(self.base).__name__} does "
-                "not lower to the accelerator decision kernels — only the "
-                "analytic roofline base is pure array math; predictor "
-                "bases run host-side, use backend='numpy'")
+                "not lower to the accelerator decision kernels — the base "
+                "must be pure array math (AnalyticCost) or a lowerable "
+                "PredictorCost; use backend='numpy'")
+        base = base_fn()        # may itself raise for host-only regressors
+        if base.objectives != ("latency_s",):
+            raise TypeError(
+                "CompositeCost needs a latency-only base (AnalyticCost "
+                "or PredictorCost) to lower — a base carrying its own "
+                "objective stack would be silently overwritten")
         w = weight_vector(self.objectives, self.weights)
-        return AccelSpec(self.base.efficiency, tuple(float(x) for x in w),
-                         radio_watts=self.radio_watts,
-                         price_per_edge_s=self.price_per_edge_s,
-                         price_per_gb=self.price_per_gb,
-                         deadline_s=float(self.deadline_s),
-                         objectives=self.objectives)
+        return dataclasses.replace(
+            base, weights=tuple(float(x) for x in w),
+            radio_watts=self.radio_watts,
+            price_per_edge_s=self.price_per_edge_s,
+            price_per_gb=self.price_per_gb,
+            deadline_s=float(self.deadline_s),
+            objectives=self.objectives)
 
 
 def _tdp_or_zero(tdp: Optional[np.ndarray], n: int) -> np.ndarray:

@@ -23,11 +23,13 @@ this module's host path; ``"jax"`` lowers the same pipeline to jitted XLA
 (``repro.kernels.decide_split.ops``), bit-for-bit equal in f64, so
 serving engines can re-plan on-accelerator next to the model; ``"pallas"``
 is a fused TPU kernel for very large sweeps that never materialises the
-``[n_envs, L+1]`` cost tensor in HBM (within f32 tolerance).  A cost
-model lowers to the accelerator iff it is pure array math over
-``EnvArrays`` — ``AnalyticCost`` and ``CompositeCost`` (over an analytic
-base) lower via ``costs.lower_to_accel``; ``PredictorCost`` does *not*
-(its fitted regressor evaluates host-side, arbitrary Python) and raises a
+``[n_envs, L+1]`` cost tensor in HBM (within f32 tolerance).  Cost
+models lower via ``costs.lower_to_accel``: ``AnalyticCost`` and
+``CompositeCost`` are pure array math over ``EnvArrays``;
+``PredictorCost`` lowers by compiling its fitted regressor to array
+form (``repro.oracle.lowered`` — ridge → dot, MLP → jitted matmul
+chain, GBT → the ``tree_predict`` kernels), so predictor-driven sweeps
+run on-accelerator too.  Only regressors outside those families raise
 ``TypeError`` on accelerator backends rather than silently copying back.
 
 Usage::
@@ -239,10 +241,11 @@ def decide_all(layers: Sequence[LayerCost], envs: EnvArrays,
     ``backend`` selects where the sweep runs: ``"numpy"`` on the host
     (default), ``"jax"`` as jitted XLA (bit-for-bit with numpy in f64),
     ``"pallas"`` as the fused TPU kernel for very large sweeps (within
-    f32 tolerance) — see :mod:`repro.kernels.decide_split`.  Only pure
-    array-math cost models lower (``None``/``AnalyticCost``/
-    ``CompositeCost``); ``PredictorCost`` raises on accelerator backends
-    because its regressor runs host-side.
+    f32 tolerance) — see :mod:`repro.kernels.decide_split`.
+    ``None``/``AnalyticCost``/``CompositeCost`` lower as pure array
+    math; ``PredictorCost`` lowers through its compiled regressor
+    (``repro.oracle.lowered``) and only raises when the wrapped model
+    has no array form.
     """
     if cost is not None and efficiency != EFFICIENCY:
         raise ValueError(

@@ -27,6 +27,9 @@ FEATURE_NAMES = [
 ]
 
 TARGET_NAMES = ["flops", "macs", "total_time"]
+#: the optional resource-utilisation targets (paper abstract: predict
+#: "execution time and resource utilization"), selectable via targets=
+EXTENDED_TARGET_NAMES = TARGET_NAMES + ["step_time", "peak_bytes"]
 
 
 def featurize(rec: ProfileRecord) -> np.ndarray:
@@ -60,13 +63,23 @@ def featurize(rec: ProfileRecord) -> np.ndarray:
     return np.asarray(feats, np.float32)
 
 
-def targets_of(rec: ProfileRecord) -> np.ndarray:
-    t = rec.targets()
-    return np.asarray([t[n] for n in TARGET_NAMES], np.float32)
+def targets_of(rec: ProfileRecord, targets=None) -> np.ndarray:
+    """Target vector for one record.  ``targets`` selects/reorders the
+    columns (default: the paper's :data:`TARGET_NAMES`; any subset of
+    :data:`EXTENDED_TARGET_NAMES` — e.g. ``["total_time", "peak_bytes"]``
+    to train a joint completion-time + memory predictor)."""
+    names = list(TARGET_NAMES if targets is None else targets)
+    t = rec.targets(extended=True)
+    unknown = set(names) - set(t)
+    if unknown:
+        raise KeyError(f"unknown target(s) {sorted(unknown)}; "
+                       f"known: {sorted(t)}")
+    return np.asarray([t[n] for n in names], np.float32)
 
 
-def records_to_dataset(records: list[ProfileRecord]):
+def records_to_dataset(records: list[ProfileRecord], targets=None):
     from repro.data.synthetic import TabularDataset
+    names = list(TARGET_NAMES if targets is None else targets)
     x = np.stack([featurize(r) for r in records])
-    y = np.stack([targets_of(r) for r in records])
-    return TabularDataset(x, y, list(FEATURE_NAMES), list(TARGET_NAMES))
+    y = np.stack([targets_of(r, names) for r in records])
+    return TabularDataset(x, y, list(FEATURE_NAMES), names)

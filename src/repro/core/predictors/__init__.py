@@ -3,13 +3,20 @@ from repro.core.predictors.common import (normalised_rmse, per_target_nrmse,
 from repro.core.predictors.gbt import GBTRegressor, MultiTargetGBT
 from repro.core.predictors.linear import RidgeRegressor
 from repro.core.predictors.mlp import SIZE_PRESETS, MLPRegressor
+from repro.core.predictors.persist import load_predictor, save_predictor
+
+#: the ridge baseline under the paper's generic name
+LinearRegressor = RidgeRegressor
 
 __all__ = [
     "GBTRegressor",
     "MultiTargetGBT",
+    "LinearRegressor",
     "MLPRegressor",
     "RidgeRegressor",
     "SIZE_PRESETS",
+    "load_predictor",
+    "save_predictor",
     "normalised_rmse",
     "per_target_nrmse",
     "r2",

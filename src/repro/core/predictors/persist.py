@@ -1,0 +1,154 @@
+"""Predictor persistence: ``.npz`` arrays + ``.json`` metadata.
+
+Every fitted regressor family saves as two sidecar files —
+``<path>.npz`` holding the fitted arrays and ``<path>.json`` holding
+the constructor hyper-parameters plus fitted scalars — and loads back
+to a model whose ``predict`` is *exactly* equivalent (GBT trees
+round-trip through the flattened ``tree_predict`` node arrays, so a
+saved ensemble is already its accelerator-lowered form).  Writes go
+through a temp file + ``os.replace`` so a reader (the predictor
+registry's atomic-swap pointer) never observes a half-written model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.predictors.gbt import GBTRegressor, MultiTargetGBT
+from repro.core.predictors.linear import RidgeRegressor
+from repro.core.predictors.mlp import MLPRegressor
+
+FORMAT_VERSION = 1
+
+
+def _hyperparams(model) -> dict:
+    return {f.name: getattr(model, f.name)
+            for f in dataclasses.fields(model)}
+
+
+def _atomic_write(path: str, write_fn) -> None:
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp-",
+                               suffix=os.path.splitext(path)[1])
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def _gbt_arrays(model: GBTRegressor, prefix: str = "") -> dict:
+    from repro.kernels.tree_predict.ref import flatten_gbt
+    t = flatten_gbt(model)
+    return {f"{prefix}feature": t.feature,
+            f"{prefix}threshold_bin": t.threshold_bin,
+            f"{prefix}left": t.left, f"{prefix}right": t.right,
+            f"{prefix}value": t.value, f"{prefix}n_nodes": t.n_nodes,
+            f"{prefix}edges": t.edges}
+
+
+def _gbt_restore(model: GBTRegressor, arrays, meta: dict,
+                 prefix: str = "") -> GBTRegressor:
+    from repro.kernels.tree_predict.ref import TreeArrays, unflatten_gbt
+    t = TreeArrays(arrays[f"{prefix}feature"],
+                   arrays[f"{prefix}threshold_bin"],
+                   arrays[f"{prefix}left"], arrays[f"{prefix}right"],
+                   arrays[f"{prefix}value"], arrays[f"{prefix}n_nodes"],
+                   arrays[f"{prefix}edges"], meta["base"],
+                   model.learning_rate, 0)
+    model.edges_ = arrays[f"{prefix}edges"]
+    model.base_ = float(meta["base"])
+    model.trees_ = unflatten_gbt(t)
+    return model
+
+
+def save_predictor(model, path: str) -> Tuple[str, str]:
+    """Save a fitted regressor; returns ``(npz_path, json_path)``.
+    ``path`` is the extension-less base path."""
+    if not isinstance(model, (RidgeRegressor, MLPRegressor, GBTRegressor,
+                              MultiTargetGBT)):
+        raise TypeError(
+            f"cannot persist {type(model).__name__}: supported families "
+            "are RidgeRegressor, MLPRegressor, GBTRegressor, "
+            "MultiTargetGBT")
+    meta: dict = {"format": FORMAT_VERSION,
+                  "type": type(model).__name__,
+                  "params": _hyperparams(model)}
+    arrays: dict = {}
+    if isinstance(model, RidgeRegressor):
+        arrays = {"x_mu": model.x_mu_, "x_sd": model.x_sd_, "w": model.w_}
+    elif isinstance(model, MLPRegressor):
+        arrays = {f"p_{k}": np.asarray(v)
+                  for k, v in model.params_.items()}
+        meta["n_layers"] = model.n_layers_
+        if model.standardize:
+            arrays.update(x_mu=model.x_mu_, x_sd=model.x_sd_,
+                          y_mu=model.y_mu_, y_sd=model.y_sd_)
+    elif isinstance(model, GBTRegressor):
+        arrays = _gbt_arrays(model)
+        meta["base"] = model.base_
+    else:                                # MultiTargetGBT
+        meta["n_targets"] = len(model.models_)
+        meta["base"] = [m.base_ for m in model.models_]
+        for i, m in enumerate(model.models_):
+            arrays.update(_gbt_arrays(m, prefix=f"m{i}_"))
+    npz_path, json_path = f"{path}.npz", f"{path}.json"
+    _atomic_write(npz_path, lambda f: np.savez(f, **arrays))
+    _atomic_write(json_path,
+                  lambda f: f.write(json.dumps(meta, indent=1,
+                                               default=float).encode()))
+    return npz_path, json_path
+
+
+def load_predictor(path: str):
+    """Load a regressor saved by :func:`save_predictor` (``path`` is the
+    same extension-less base path); ``predict`` round-trips exactly."""
+    with open(f"{path}.json") as f:
+        meta = json.load(f)
+    if meta.get("format", 0) > FORMAT_VERSION:
+        raise ValueError(f"predictor bundle {path!r} has format "
+                         f"{meta['format']} > supported {FORMAT_VERSION}")
+    arrays = dict(np.load(f"{path}.npz"))
+    kind = meta["type"]
+    classes = {c.__name__: c for c in (RidgeRegressor, MLPRegressor,
+                                       GBTRegressor, MultiTargetGBT)}
+    if kind not in classes:
+        raise ValueError(f"unknown predictor type {kind!r} in {path}.json")
+    params = dict(meta["params"])
+    for k, v in params.items():          # JSON lists -> ctor tuples
+        if isinstance(v, list):
+            params[k] = tuple(v)
+    model = classes[kind](**params)
+    if kind == "RidgeRegressor":
+        model.x_mu_, model.x_sd_, model.w_ = (arrays["x_mu"],
+                                              arrays["x_sd"], arrays["w"])
+    elif kind == "MLPRegressor":
+        model.params_ = {k[2:]: v for k, v in arrays.items()
+                         if k.startswith("p_")}
+        model.n_layers_ = int(meta["n_layers"])
+        if model.standardize:
+            model.x_mu_, model.x_sd_ = arrays["x_mu"], arrays["x_sd"]
+            model.y_mu_, model.y_sd_ = arrays["y_mu"], arrays["y_sd"]
+    elif kind == "GBTRegressor":
+        _gbt_restore(model, arrays, meta)
+    else:                                # MultiTargetGBT
+        model.models_ = []
+        for i in range(int(meta["n_targets"])):
+            sub = GBTRegressor(
+                n_trees=model.n_trees, max_depth=model.max_depth,
+                learning_rate=model.learning_rate,
+                subsample=model.subsample, n_bins=model.n_bins,
+                seed=model.seed + i, use_kernel=model.use_kernel)
+            _gbt_restore(sub, arrays, {"base": meta["base"][i]},
+                         prefix=f"m{i}_")
+            model.models_.append(sub)
+    return model

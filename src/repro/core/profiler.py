@@ -46,12 +46,22 @@ class ProfileRecord:
     config: dict
     hardware: dict
 
-    def targets(self) -> dict:
-        return {
+    def targets(self, extended: bool = False) -> dict:
+        """Prediction targets.  The default three are the paper's Fig. 3
+        stack;
+        ``extended=True`` additionally surfaces the resource-utilisation
+        targets (per-step time and peak memory) so predictors can learn
+        *resource use*, not just completion time (paper abstract:
+        "execution time and resource utilization")."""
+        out = {
             "flops": self.flops_per_step,
             "macs": self.macs_per_step,
             "total_time": self.total_time_s,
         }
+        if extended:
+            out["step_time"] = self.step_time_s
+            out["peak_bytes"] = self.peak_bytes
+        return out
 
 
 def _cost_of(jitted, *args) -> dict:

@@ -9,21 +9,27 @@ cost tensor is never materialised in HBM (the numpy/jit paths build all
 
 The factorisation that makes the fusion cheap: the forward/backward
 prefix sums over per-layer times are environment-invariant up to one
-divide, because ``t_dev[e, l] = flops[l] / (dev_flops[e] · eff)``.  The
-caller ships the ``[L+1]`` prefix ``F[s] = Σ_{l<s} flops[l]`` once and
-the kernel reconstructs both cumulative sums per tile::
+divide.  The caller ships two ``[L+1]`` prefix rows and two ``[E]``
+divisor columns and the kernel reconstructs both cumulative sums per
+tile::
 
-    dev_cum[e, s]  = F[s] / (dev_flops[e] · eff)
-    edge_cum[e, s] = (F[L] − F[s]) / (edge_flops[e] · eff)
+    dev_cum[e, s]  = dcum[s] / dev_div[e]
+    edge_cum[e, s] = (etot − ecum[s]) / edge_div[e]
     xfer[e, s]     = 0 at s == L, else lat[e] + ship[e, s] / max(bw[e], 1)
     ship[e, s]     = input_bytes[e] at s == 0, else act_bytes[s − 1]
+
+For the analytic roofline model ``dcum = ecum = F`` (the FLOPs prefix)
+and ``dev_div[e] = dev_flops[e] · eff``; for a lowered profiling
+predictor (``repro.oracle.lowered``) ``dcum``/``ecum`` are the prefix
+sums of the *predicted* per-layer times and the divisors are 1 — one
+kernel serves both families.
 
 On top of latency the tile evaluates the full CompositeCost objective
 stack (energy from TDP, price, deadline slack) and the weighted
 scalarisation — latency-only decisions are the ``weights = (1, 0, 0, 0)``
 special case, so one kernel serves every cost model that lowers.
 
-VMEM per step: two [1, block_s] layer rows + eight [block_e, 1] env
+VMEM per step: three [1, block_s] layer rows + nine [block_e, 1] env
 columns + the [block_e, block_s] tile intermediates + [block_e, 1]
 scratch ≈ 0.6 MB at (256, 128) f32.
 """
@@ -38,13 +44,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 # spec vector layout (SMEM): scalar parameters of the lowered cost model
-SPEC_EFF, SPEC_RADIO, SPEC_PPS, SPEC_PPG, SPEC_DEADLINE = range(5)
-SPEC_W0, SPEC_W1, SPEC_W2, SPEC_W3, SPEC_FTOT = range(5, 10)
-SPEC_LEN = 10
+SPEC_RADIO, SPEC_PPS, SPEC_PPG, SPEC_DEADLINE = range(4)
+SPEC_W0, SPEC_W1, SPEC_W2, SPEC_W3, SPEC_ETOT = range(4, 9)
+SPEC_LEN = 9
 
 
-def _kernel(spec_ref, fcum_ref, bvec_ref, dev_ref, edge_ref, bw_ref,
-            lat_ref, inp_ref, dev_w_ref, edge_w_ref,
+def _kernel(spec_ref, dcum_ref, ecum_ref, bvec_ref, dev_div_ref,
+            edge_div_ref, bw_ref, lat_ref, inp_ref, dev_w_ref, edge_w_ref,
             split_ref, cost_ref, best_scr, idx_scr,
             *, block_s: int, n_split_blocks: int, n_splits: int):
     ib = pl.program_id(1)
@@ -54,19 +60,17 @@ def _kernel(spec_ref, fcum_ref, bvec_ref, dev_ref, edge_ref, bw_ref,
         best_scr[...] = jnp.full_like(best_scr, jnp.inf)
         idx_scr[...] = jnp.zeros_like(idx_scr)
 
-    eff = spec_ref[SPEC_EFF]
-    ftot = spec_ref[SPEC_FTOT]
+    etot = spec_ref[SPEC_ETOT]
     be = best_scr.shape[0]
     cols = ib * block_s + jax.lax.broadcasted_iota(
         jnp.int32, (be, block_s), 1)                     # [BE, BS]
 
-    f = fcum_ref[...]                                    # [1, BS]
-    b = bvec_ref[...]                                    # [1, BS]
-    dev = dev_ref[...]                                   # [BE, 1]
-    edge = edge_ref[...]
+    dc = dcum_ref[...]                                   # [1, BS]
+    ec = ecum_ref[...]
+    b = bvec_ref[...]
 
-    dev_t = f / (dev * eff)                              # [BE, BS]
-    edge_t = (ftot - f) / (edge * eff)
+    dev_t = dc / dev_div_ref[...]                        # [BE, BS]
+    edge_t = (etot - ec) / edge_div_ref[...]
     is_last = cols == n_splits - 1                       # split == L
     ship = jnp.where(is_last, 0.0,
                      jnp.where(cols == 0, inp_ref[...], b))
@@ -96,25 +100,29 @@ def _kernel(spec_ref, fcum_ref, bvec_ref, dev_ref, edge_ref, bw_ref,
         cost_ref[...] = best_scr[...]
 
 
-def decide_split_kernel(fcum, bvec, dev, edge, bw, lat, inp, dev_w, edge_w,
-                        spec, *, block_e: int = 8, block_s: int = 128,
+def decide_split_kernel(dcum, ecum, bvec, dev_div, edge_div, bw, lat, inp,
+                        dev_w, edge_w, spec, *, block_e: int = 8,
+                        block_s: int = 128,
                         interpret: bool | None = None):
-    """``fcum``/``bvec`` [L+1] f32; env arrays [E] f32; ``spec``
-    [SPEC_LEN] f32.  Returns ``(split [E] int32, scalar cost [E] f32)``.
+    """``dcum``/``ecum``/``bvec`` [L+1] f32 split rows; env arrays [E]
+    f32; ``spec`` [SPEC_LEN] f32.  Returns ``(split [E] int32, scalar
+    cost [E] f32)``.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    n_envs, n_splits = dev.shape[0], fcum.shape[0]
+    n_envs, n_splits = dev_div.shape[0], dcum.shape[0]
     block_e = min(block_e, max(n_envs, 1))
     block_s = min(block_s, n_splits)
     pad_e = (-n_envs) % block_e
     pad_s = (-n_splits) % block_s
     # padded env rows divide by 1.0 and are sliced off below
-    dev, edge, bw = (jnp.pad(x, (0, pad_e), constant_values=1.0)[:, None]
-                     for x in (dev, edge, bw))
+    dev_div, edge_div, bw = (jnp.pad(x, (0, pad_e),
+                                     constant_values=1.0)[:, None]
+                             for x in (dev_div, edge_div, bw))
     lat, inp, dev_w, edge_w = (jnp.pad(x, (0, pad_e))[:, None]
                                for x in (lat, inp, dev_w, edge_w))
-    fcum, bvec = (jnp.pad(x, (0, pad_s))[None, :] for x in (fcum, bvec))
+    dcum, ecum, bvec = (jnp.pad(x, (0, pad_s))[None, :]
+                        for x in (dcum, ecum, bvec))
     ep, sp = n_envs + pad_e, n_splits + pad_s
     n_split_blocks = sp // block_s
 
@@ -128,8 +136,8 @@ def decide_split_kernel(fcum, bvec, dev, edge, bw, lat, inp, dev_w, edge_w,
         grid=(ep // block_e, n_split_blocks),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),       # spec scalars
-            row_spec, row_spec,                          # fcum, bvec
-            env_spec, env_spec, env_spec, env_spec,      # dev, edge, bw, lat
+            row_spec, row_spec, row_spec,                # dcum, ecum, bvec
+            env_spec, env_spec, env_spec, env_spec,      # divs, bw, lat
             env_spec, env_spec, env_spec,                # inp, dev_w, edge_w
         ],
         out_specs=[env_spec, env_spec],
@@ -140,19 +148,20 @@ def decide_split_kernel(fcum, bvec, dev, edge, bw, lat, inp, dev_w, edge_w,
         scratch_shapes=[pltpu.VMEM((block_e, 1), jnp.float32),
                         pltpu.VMEM((block_e, 1), jnp.int32)],
         interpret=interpret,
-    )(spec, fcum, bvec, dev, edge, bw, lat, inp, dev_w, edge_w)
+    )(spec, dcum, ecum, bvec, dev_div, edge_div, bw, lat, inp, dev_w,
+      edge_w)
     return split[:n_envs, 0], cost[:n_envs, 0]
 
 
-def pack_spec(efficiency, weights, radio_watts=0.0, price_per_edge_s=0.0,
-              price_per_gb=0.0, deadline_s=np.inf, flops_total=0.0):
-    """Build the [SPEC_LEN] f32 scalar vector the kernel reads from SMEM."""
+def pack_spec(weights, radio_watts=0.0, price_per_edge_s=0.0,
+              price_per_gb=0.0, deadline_s=np.inf, edge_total=0.0):
+    """Build the [SPEC_LEN] f32 scalar vector the kernel reads from SMEM
+    (``edge_total`` is ``ecum[-1]``, the full edge-side prefix)."""
     out = np.zeros(SPEC_LEN, np.float32)
-    out[SPEC_EFF] = efficiency
     out[SPEC_RADIO] = radio_watts
     out[SPEC_PPS] = price_per_edge_s
     out[SPEC_PPG] = price_per_gb
     out[SPEC_DEADLINE] = deadline_s
     out[SPEC_W0:SPEC_W0 + 4] = weights
-    out[SPEC_FTOT] = flops_total
+    out[SPEC_ETOT] = edge_total
     return out

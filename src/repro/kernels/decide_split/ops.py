@@ -9,9 +9,13 @@ reference; ``backend="pallas"`` calls the fused TPU kernel
 cost tensor in HBM and matches within f32 tolerance.
 
 Cost models lower through :func:`repro.core.costs.lower_to_accel`:
-``AnalyticCost`` and ``CompositeCost`` over an analytic base are pure
-array math and lower; ``PredictorCost`` evaluates its regressor host-side
-and is rejected with a ``TypeError``.
+``AnalyticCost`` and ``CompositeCost`` are pure array math over
+``EnvArrays``; ``PredictorCost`` lowers by compiling its fitted
+regressor to array form (``repro.oracle.lowered`` — the ``AccelSpec``
+carries a ``lowered`` layer-times program whose per-layer device/edge
+time vectors replace the analytic roofline reconstruction).  Only
+regressors outside the lowerable families (ridge / MLP / GBT) are
+rejected with a ``TypeError``.
 
 Bit-for-bit notes (why this file looks the way it does):
 
@@ -22,8 +26,10 @@ Bit-for-bit notes (why this file looks the way it does):
     perturbs the last ulp of the energy/price objectives and the weighted
     scalarisation.  The multi-objective assembly therefore runs as
     *eager* jnp ops — still device-resident, but one primitive per
-    dispatch, which XLA cannot contract.  The latency-only pipeline has
-    no mul→add chain and stays fully jitted.
+    dispatch, which XLA cannot contract.  The latency-only pipelines
+    (analytic and predictor-driven) have no mul→add chain and stay
+    fully jitted; lowered tree-model inference is add-only (leaf values
+    pre-scaled on the host), so it too stays bit-for-bit under jit.
   * Everything executes in f64 under ``jax.experimental.enable_x64`` so
     host and accelerator decisions are interchangeable; the Pallas path
     runs the kernel in f32 (the TPU-native width) and re-evaluates the
@@ -93,6 +99,28 @@ def _latency_parts(flops, act, dev, edge, bw, lat, inp, eff):
 
 
 @jax.jit
+def _predictor_parts(t_dev, t_edge, act, bw, lat, inp):
+    """Predictor twin of :func:`_latency_parts`: the per-layer time
+    vectors are environment-invariant (one device/edge pair per
+    ``PredictorCost``), so both cumulative rows are computed once and
+    broadcast — the exact float ordering of the host
+    ``PredictorCost.latency_parts``."""
+    e, n = bw.shape[0], t_dev.shape[0]
+    zero1 = jnp.zeros((1, 1), t_dev.dtype)
+    dcum = jnp.concatenate([zero1, _seq_cumsum(t_dev[None, :])], axis=1)[0]
+    ecum = jnp.concatenate(
+        [_seq_cumsum(t_edge[None, ::-1])[:, ::-1], zero1], axis=1)[0]
+    tb = jnp.concatenate(
+        [inp[:, None], jnp.broadcast_to(act[None, :], (e, n))], axis=1)
+    tb = tb.at[:, -1].set(0.0)
+    xfer = lat[:, None] + tb / jnp.maximum(bw, 1.0)[:, None]
+    xfer = xfer.at[:, -1].set(0.0)
+    shape = (e, n + 1)
+    return (jnp.broadcast_to(dcum, shape), xfer,
+            jnp.broadcast_to(ecum, shape), tb)
+
+
+@jax.jit
 def _decide_latency(flops, act, dev, edge, bw, lat, inp, eff):
     """Latency-only decide: fully fused, bit-for-bit vs the numpy path."""
     dev_cum, xfer, edge_cum, _ = _latency_parts(flops, act, dev, edge, bw,
@@ -100,6 +128,19 @@ def _decide_latency(flops, act, dev, edge, bw, lat, inp, eff):
     total = dev_cum + xfer + edge_cum
     s = jnp.argmin(total, axis=1)
     rows = jnp.arange(dev.shape[0])
+    return s, total[rows, s], dev_cum[rows, s], xfer[rows, s], \
+        edge_cum[rows, s]
+
+
+@jax.jit
+def _decide_predictor(t_dev, t_edge, act, bw, lat, inp):
+    """Latency-only predictor decide: fully fused (the broadcast +
+    transfer + argmin pipeline is add/divide only — no FMA chain)."""
+    dev_cum, xfer, edge_cum, _ = _predictor_parts(t_dev, t_edge, act, bw,
+                                                  lat, inp)
+    total = dev_cum + xfer + edge_cum
+    s = jnp.argmin(total, axis=1)
+    rows = jnp.arange(bw.shape[0])
     return s, total[rows, s], dev_cum[rows, s], xfer[rows, s], \
         edge_cum[rows, s]
 
@@ -149,16 +190,27 @@ def _plan(cost, spec: AccelSpec, s, dev_s, xfer_s, edge_s, total_s,
                         scalar_cost=scal_s)
 
 
-def _decide_jax(flops, act, env_arrs, spec: AccelSpec, cost):
+def _decide_jax(layers, flops, act, env_arrs, spec: AccelSpec, cost):
     dev, edge, bw, lat, inp, dev_w, edge_w = env_arrs
     with enable_x64():
-        args = tuple(jnp.asarray(x) for x in
-                     (flops, act, dev, edge, bw, lat, inp))
-        if spec.objectives == ("latency_s",):
-            s, total_s, dev_s, xfer_s, edge_s = _decide_latency(
-                *args, spec.efficiency)
-            return _plan(cost, spec, s, dev_s, xfer_s, edge_s, total_s)
-        dev_cum, xfer, edge_cum, tb = _latency_parts(*args, spec.efficiency)
+        if spec.lowered is not None:
+            t_dev, t_edge = spec.lowered.times(layers)
+            pargs = tuple(jnp.asarray(x) for x in
+                          (t_dev, t_edge, act, bw, lat, inp))
+            if spec.objectives == ("latency_s",):
+                s, total_s, dev_s, xfer_s, edge_s = _decide_predictor(
+                    *pargs)
+                return _plan(cost, spec, s, dev_s, xfer_s, edge_s, total_s)
+            dev_cum, xfer, edge_cum, tb = _predictor_parts(*pargs)
+        else:
+            args = tuple(jnp.asarray(x) for x in
+                         (flops, act, dev, edge, bw, lat, inp))
+            if spec.objectives == ("latency_s",):
+                s, total_s, dev_s, xfer_s, edge_s = _decide_latency(
+                    *args, spec.efficiency)
+                return _plan(cost, spec, s, dev_s, xfer_s, edge_s, total_s)
+            dev_cum, xfer, edge_cum, tb = _latency_parts(*args,
+                                                         spec.efficiency)
         s, comp_s, scal_s, dev_s, xfer_s, edge_s = _composite_decide(
             (dev_cum, xfer, edge_cum), tb, jnp.asarray(dev_w),
             jnp.asarray(edge_w), spec)
@@ -167,30 +219,43 @@ def _decide_jax(flops, act, env_arrs, spec: AccelSpec, cost):
                      comp_s, scal_s)
 
 
-def _decide_pallas(flops, act, env_arrs, spec: AccelSpec, cost,
+def _decide_pallas(layers, flops, act, env_arrs, spec: AccelSpec, cost,
                    interpret: Optional[bool], block_e: int, block_s: int):
     from repro.kernels.decide_split.kernel import (decide_split_kernel,
                                                    pack_spec)
     dev, edge, bw, lat, inp, dev_w, edge_w = env_arrs
     n = flops.shape[0]
-    fcum = np.concatenate(([0.0], np.cumsum(flops)))     # [L+1] f64
     bvec = np.concatenate(([0.0], act))
     bvec[-1] = 0.0                                       # split == L
-    spec_vec = pack_spec(spec.efficiency, spec.weights,
+    if spec.lowered is not None:
+        # predictor mode: prefix sums of the lowered per-layer times,
+        # unit divisors (the rows already are seconds)
+        t_dev, t_edge = spec.lowered.times(layers)
+        dcum = np.concatenate(([0.0], np.cumsum(t_dev)))
+        ecum = np.concatenate(([0.0], np.cumsum(t_edge)))
+        dev_div = np.ones_like(dev)
+        edge_div = np.ones_like(edge)
+    else:
+        fcum = np.concatenate(([0.0], np.cumsum(flops)))  # [L+1] f64
+        dcum = ecum = fcum
+        dev_div = dev * spec.efficiency
+        edge_div = edge * spec.efficiency
+    etot = float(ecum[-1])
+    spec_vec = pack_spec(spec.weights,
                          radio_watts=spec.radio_watts,
                          price_per_edge_s=spec.price_per_edge_s,
                          price_per_gb=spec.price_per_gb,
-                         deadline_s=spec.deadline_s, flops_total=fcum[-1])
+                         deadline_s=spec.deadline_s, edge_total=etot)
     f32 = [jnp.asarray(x, jnp.float32)
-           for x in (fcum, bvec, dev, edge, bw, lat, inp, dev_w, edge_w)]
+           for x in (dcum, ecum, bvec, dev_div, edge_div, bw, lat, inp,
+                     dev_w, edge_w)]
     s, _ = decide_split_kernel(*f32, jnp.asarray(spec_vec),
                                block_e=block_e, block_s=block_s,
                                interpret=interpret)
     s = np.asarray(s, np.int64)
     # exact f64 costs at the kernel-chosen splits: O(E) gathers, no [E, S]
-    eff = spec.efficiency
-    dev_s = fcum[s] / (dev * eff)
-    edge_s = (fcum[-1] - fcum[s]) / (edge * eff)
+    dev_s = dcum[s] / dev_div
+    edge_s = (etot - ecum[s]) / edge_div
     ship = np.where(s == n, 0.0, np.where(s == 0, inp, bvec[s]))
     xfer_s = np.where(s == n, 0.0, lat + ship / np.maximum(bw, 1.0))
     total_s = dev_s + xfer_s + edge_s
@@ -216,8 +281,9 @@ def decide_accel(layers: Sequence[LayerCost], envs: EnvArrays,
     ``backend="jax"`` is jitted XLA, bit-for-bit (f64) with the numpy
     path; ``backend="pallas"`` is the fused TPU kernel, within f32
     tolerance (``interpret``/``block_e``/``block_s`` tune it; interpret
-    defaults to True off-TPU).  Raises ``TypeError`` for cost models that
-    do not lower (``PredictorCost``) — see
+    defaults to True off-TPU).  Predictor-driven costs run their lowered
+    regressor on-device (``AccelSpec.lowered``); raises ``TypeError``
+    only for cost models with no array lowering — see
     :func:`repro.core.costs.lower_to_accel`.
     """
     if backend not in ("jax", "pallas"):
@@ -236,9 +302,9 @@ def decide_accel(layers: Sequence[LayerCost], envs: EnvArrays,
                          None if spec.objectives == ("latency_s",)
                          else np.zeros((0, len(ACCEL_OBJECTIVES))),
                          empty)
-        return _decide_pallas(flops, act, env_arrs, spec, cost,
+        return _decide_pallas(layers, flops, act, env_arrs, spec, cost,
                               interpret, block_e, block_s)
-    return _decide_jax(flops, act, env_arrs, spec, cost)
+    return _decide_jax(layers, flops, act, env_arrs, spec, cost)
 
 
 def latency_matrix_jax(layers: Sequence[LayerCost], envs: EnvArrays,

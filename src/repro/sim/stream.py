@@ -157,6 +157,12 @@ class StreamScheduler:
         self._etc_of[id(a)] = etc_tj
         return a
 
+    def etc_of(self, a: sch.Assignment) -> float:
+        """The exact ETC value an assignment was placed with — the
+        prediction an online oracle compares realised times against
+        (recomputing it can disagree in the last ulp)."""
+        return self._etc_of[id(a)]
+
     # -- node-free events -------------------------------------------------
     def node_index(self, a: sch.Assignment) -> int:
         """Node index an assignment currently sits on (spec names may
@@ -222,6 +228,7 @@ LayersFor = Union[Sequence, Callable[[sch.Task], Sequence]]
 def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                     nodes: Sequence[sch.Node], *,
                     policy: str = "min_min", cost=None,
+                    oracle=None, service_time_fn=None,
                     links: Optional[ClusterLinks] = None,
                     link_update_dt: float = 1.0,
                     split_planner=None,
@@ -247,10 +254,42 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                       only the affected ETC columns, and let the split
                       planner re-pick along the live Pareto fronts
 
+    ``service_time_fn(task, node_spec, etc_s, start_s) -> seconds``
+    injects a ground-truth service-time model *independent of the
+    scheduler's prediction*: the scheduler still queues and places by
+    its believed ETC, but each task's completion event fires at
+    ``start + actual``, and telemetry/energy/oracle observations record
+    the realised time.  ``start_s`` (virtual time the task starts) lets
+    the truth drift mid-run — e.g. a node that silently slows down at
+    t=200.  Without this seam the simulator is model-driven — realised
+    == predicted by construction — so it is what makes prediction
+    error, and therefore online learning, visible in-sim.
+
+    ``oracle`` plugs an :class:`repro.oracle.online.OnlineOracle` into
+    the loop: its :class:`~repro.oracle.online.OracleCost` drives the
+    scheduler's ETC rows, and every completion feeds ``(features,
+    realised service time)`` back through ``observe_task`` — residual
+    correction, Page–Hinkley drift detection, and window refits
+    (telemetry counts ``oracle_observations`` / ``oracle_drift_triggers``
+    / ``oracle_refits`` and gauges ``oracle_nrmse``).  Features and the
+    transfer estimate are taken from the node spec *at placement* (link
+    drift between placement and completion must not corrupt the
+    (feature, target) pairs refits train on).  With a static
+    environment, no ``service_time_fn``, and no drift the oracle is
+    bit-transparent: placements are identical to running the same
+    fitted model as a plain ``cost=PredictorCost(...)``.
+
     Returns the filled :class:`Telemetry` (the scheduler's counters and
     one :class:`TaskRecord` per task).
     """
     telemetry = telemetry if telemetry is not None else Telemetry()
+    if oracle is not None:
+        if cost is not None:
+            raise ValueError("pass either cost= or oracle= — the oracle "
+                             "supplies the scheduler's cost model "
+                             "(oracle.cost_model())")
+        cost = oracle.cost_model()
+        oracle.telemetry = telemetry           # counters/gauges per run
     if split_planner is not None:
         if split_env is None or split_layers is None:
             raise ValueError("split_planner needs split_env= and "
@@ -282,6 +321,22 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
     live: dict[int, sch.Assignment] = {}         # rid -> assignment
     rid_of: dict[int, int] = {}                  # id(assignment) -> rid
     completed: set[int] = set()                  # id(assignment)
+    spec_at_place: dict[int, object] = {}        # id(a) -> spec at placement
+    real_finish: dict[int, float] = {}           # id(a) -> realised finish
+
+    def schedule_finish(a: sch.Assignment) -> None:
+        """Queue the completion event: at the believed finish, or at
+        ``start + actual`` when a ground-truth model rides along (the
+        scheduler's queue bookkeeping stays belief-driven)."""
+        j = sched.node_index(a)
+        spec_at_place[id(a)] = sched.nodes[j].spec
+        t = a.finish
+        if service_time_fn is not None:
+            t = a.start + float(service_time_fn(a.task,
+                                                sched.nodes[j].spec,
+                                                sched.etc_of(a), a.start))
+        real_finish[id(a)] = t
+        q.push(t, "finish", a)
 
     while q:
         ev = q.pop()
@@ -299,7 +354,7 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                 rid = slots[id(a.task)].pop(0)
                 live[rid] = a
                 rid_of[id(a)] = rid
-                q.push(a.finish, "finish", a)
+                schedule_finish(a)
                 if split_planner is not None:
                     split_planner.admit(
                         rid, layers_for(a.task), split_env.link_bw,
@@ -307,11 +362,19 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                         deadline_s=a.task.deadline_s)
         elif ev.kind == "finish":
             a = ev.payload
-            if id(a) in completed or a.finish != now:
+            if id(a) in completed or real_finish[id(a)] != now:
                 continue                         # stale (migrated) event
             completed.add(id(a))
             rid = rid_of[id(a)]
             j = sched.node_index(a)
+            if oracle is not None:
+                # realised service time vs the exact ETC it was placed
+                # with — the profiling-in-the-loop feedback edge.  The
+                # placement-time spec keeps features/transfer consistent
+                # with what the prediction actually saw.
+                oracle.observe_task(a.task, spec_at_place[id(a)],
+                                    realised_s=now - a.start,
+                                    predicted_s=sched.etc_of(a), now=now)
             split, switches = None, 0
             if split_planner is not None:
                 rec = split_planner.complete(rid, split_env.link_bw,
@@ -319,15 +382,15 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                 split, switches = rec["pick"], rec["switches"]
             telemetry.complete(TaskRecord(
                 name=a.task.name, arrived_s=float(arrivals[rid]),
-                started_s=a.start, finished_s=a.finish, node=a.node,
+                started_s=a.start, finished_s=now, node=a.node,
                 node_id=j, deadline_s=a.task.deadline_s,
-                energy_j=(a.finish - a.start)
+                energy_j=(now - a.start)
                 * sched.nodes[j].spec.tdp_watts,
                 split=split, switches=switches))
             del live[rid]
             migrated = sched.on_node_free(j, now)
             if migrated is not None:
-                q.push(migrated.finish, "finish", migrated)
+                schedule_finish(migrated)
         elif ev.kind == "link":
             if links is not None:
                 prev = links.values()

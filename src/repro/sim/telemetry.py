@@ -55,10 +55,16 @@ class Telemetry:
     def __init__(self):
         self.records: list[TaskRecord] = []
         self.counters: Counter = Counter()
+        self.gauges: dict[str, float] = {}
 
     # -- ingestion --------------------------------------------------------
     def count(self, key: str, n: int = 1) -> None:
         self.counters[key] += n
+
+    def gauge(self, key: str, value: float) -> None:
+        """Record the latest value of a float metric (e.g. the oracle's
+        rolling nRMSE) — last write wins, exported with the summary."""
+        self.gauges[key] = float(value)
 
     def complete(self, record: TaskRecord) -> None:
         self.records.append(record)
@@ -117,11 +123,14 @@ class Telemetry:
             if util else 0.0,
             "split_switches": int(sum(r.switches for r in self.records)),
         }
-        # counters ride along under their own names; record-derived
-        # metrics win on collision (e.g. "split_switches": the records
-        # count completed tasks, the planner's counter also includes
-        # still-live ones on a truncated run)
+        # counters and gauges ride along under their own names;
+        # record-derived metrics win on collision (e.g.
+        # "split_switches": the records count completed tasks, the
+        # planner's counter also includes still-live ones on a
+        # truncated run)
         out.update({k: int(v) for k, v in sorted(self.counters.items())
+                    if k not in out})
+        out.update({k: float(v) for k, v in sorted(self.gauges.items())
                     if k not in out})
         return out
 

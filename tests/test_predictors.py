@@ -1,0 +1,215 @@
+"""Predictor-layer tests: the shared metrics, GBT kernel-training
+equivalence, persistence round-trips, and the extended-target selector."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import features as feat
+from repro.core.predictors import (GBTRegressor, LinearRegressor,
+                                   MLPRegressor, MultiTargetGBT,
+                                   RidgeRegressor, load_predictor,
+                                   normalised_rmse, per_target_nrmse, r2,
+                                   rmse, save_predictor)
+from repro.core.profiler import ProfileRecord
+
+
+def synth(rng, n=300, f=6):
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    y = 2.0 * x[:, 0] + np.sin(x[:, 1]) + 0.1 * rng.normal(size=n)
+    return x, y
+
+
+# --------------------------------------------------------------------------
+# metrics (predictors/common.py)
+# --------------------------------------------------------------------------
+def test_rmse_basic():
+    pred = np.array([1.0, 2.0, 3.0])
+    y = np.array([1.0, 2.0, 5.0])
+    assert rmse(pred, y) == pytest.approx(np.sqrt(4.0 / 3.0))
+    assert rmse(y, y) == 0.0
+
+
+def test_normalised_rmse_is_span_scaled():
+    y = np.array([[0.0], [10.0], [20.0]])
+    pred = y + 2.0
+    # residual 2 over span 20 -> 0.1
+    assert normalised_rmse(pred, y) == pytest.approx(0.1)
+    # invariant to affine target rescaling
+    assert normalised_rmse(pred * 50, y * 50) == pytest.approx(0.1)
+
+
+def test_normalised_rmse_zero_span_degenerate():
+    """A constant target column must not divide by zero — the span
+    guard substitutes 1, so the metric stays finite."""
+    y = np.full((5, 2), 3.0)
+    y[:, 1] = np.arange(5)
+    pred = y.copy()
+    pred[:, 0] += 0.5                    # error on the constant column
+    out = normalised_rmse(pred, y)
+    assert np.isfinite(out)
+    assert out == pytest.approx(np.sqrt(0.25 / 2))
+
+    per = per_target_nrmse(pred, y)
+    assert per.shape == (2,)
+    assert per[0] == pytest.approx(0.5)  # span 1 substituted
+    assert per[1] == 0.0
+
+
+def test_per_target_nrmse_matches_scalar():
+    rng = np.random.default_rng(0)
+    y = rng.normal(size=(40, 3))
+    pred = y + rng.normal(0, 0.1, size=y.shape)
+    per = per_target_nrmse(pred, y)
+    assert normalised_rmse(pred, y) == pytest.approx(
+        float(np.sqrt(np.mean(per ** 2))))
+
+
+def test_r2():
+    rng = np.random.default_rng(1)
+    y = rng.normal(size=(50, 1))
+    assert r2(y, y) == pytest.approx(1.0)
+    assert r2(np.full_like(y, y.mean()), y) == pytest.approx(0.0)
+    assert r2(-y, y) < 0.0               # worse than the mean predictor
+    # degenerate constant target: the eps guard keeps it finite
+    const = np.full((10, 1), 2.0)
+    assert np.isfinite(r2(const + 1.0, const))
+
+
+# --------------------------------------------------------------------------
+# GBT kernel-training equivalence
+# --------------------------------------------------------------------------
+def test_gbt_grad_histogram_kernel_matches_numpy():
+    """The Pallas one-hot histogram agrees with the numpy bincount path
+    (f32 kernel accumulation vs f64 host — tolerance)."""
+    from repro.core.predictors.gbt import bin_data, grad_histogram, \
+        quantile_bins
+    rng = np.random.default_rng(2)
+    x, _ = synth(rng, n=500)
+    grad = rng.normal(size=500)
+    codes = bin_data(x, quantile_bins(x, 32))
+    g0, c0 = grad_histogram(codes, grad, 32, use_kernel=False)
+    g1, c1 = grad_histogram(codes, grad, 32, use_kernel=True)
+    np.testing.assert_allclose(g1, g0, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(c1, c0)
+
+
+def test_gbt_use_kernel_training_equivalence():
+    """use_kernel=True routes the gradient histograms through the Pallas
+    one-hot kernel; on this fixture the grown trees match the
+    numpy-histogram ensemble node-for-node and predictions are
+    bit-identical (f32 histogram rounding can flip genuinely-tied
+    splits on larger data, which leaves predictions equal anyway)."""
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(120, 4)).astype(np.float32)
+    y = (x[:, 0] > 0).astype(float) * 2 + x[:, 1]
+    kw = dict(n_trees=5, max_depth=2, subsample=1.0, seed=0)
+    host = GBTRegressor(**kw, use_kernel=False).fit(x, y)
+    kern = GBTRegressor(**kw, use_kernel=True).fit(x, y)
+    assert len(host.trees_) == len(kern.trees_)
+    for th, tk in zip(host.trees_, kern.trees_):
+        assert [(n.feature, n.threshold_bin, n.left, n.right)
+                for n in th] \
+            == [(n.feature, n.threshold_bin, n.left, n.right) for n in tk]
+    np.testing.assert_array_equal(kern.predict(x), host.predict(x))
+
+
+# --------------------------------------------------------------------------
+# persistence round-trips
+# --------------------------------------------------------------------------
+def test_linear_regressor_is_ridge_alias():
+    assert LinearRegressor is RidgeRegressor
+
+
+@pytest.mark.parametrize("make,multi_y", [
+    (lambda: RidgeRegressor(alpha=0.5), True),
+    (lambda: MLPRegressor(hidden=(12, 6), epochs=8), True),
+    (lambda: GBTRegressor(n_trees=12, max_depth=3, subsample=0.8,
+                          seed=5), False),
+    (lambda: MultiTargetGBT(n_trees=6, max_depth=3, seed=5), True),
+], ids=["ridge", "mlp", "gbt", "multigbt"])
+def test_persist_round_trip_predict_equivalence(tmp_path, make, multi_y):
+    rng = np.random.default_rng(6)
+    x, y = synth(rng, n=200)
+    if multi_y:
+        y = np.stack([y, y * 0.5 + 1.0], axis=1)
+    model = make().fit(x, y)
+    base = str(tmp_path / "model")
+    npz, meta = save_predictor(model, base)
+    assert npz.endswith(".npz") and meta.endswith(".json")
+    loaded = load_predictor(base)
+    assert type(loaded) is type(model)
+    assert np.array_equal(np.asarray(model.predict(x)),
+                          np.asarray(loaded.predict(x)))
+
+
+def test_persist_round_trip_hyperparams(tmp_path):
+    rng = np.random.default_rng(7)
+    x, y = synth(rng, 120)
+    model = GBTRegressor(n_trees=5, max_depth=2, learning_rate=0.3,
+                         n_bins=32, seed=9).fit(x, y)
+    loaded = load_predictor(str(save_predictor(
+        model, str(tmp_path / "m"))[0][:-4]))
+    for f in dataclasses.fields(model):
+        assert getattr(loaded, f.name) == getattr(model, f.name), f.name
+
+
+def test_persist_rejects_unknown(tmp_path):
+    class NotAModel:
+        pass
+
+    with pytest.raises(TypeError, match="persist"):
+        save_predictor(NotAModel(), str(tmp_path / "x"))
+
+
+# --------------------------------------------------------------------------
+# extended profiling targets
+# --------------------------------------------------------------------------
+def make_record(**over):
+    base = dict(label="r", kind="mlp", flops_per_step=1e9,
+                macs_per_step=5e8, total_time_s=12.0, step_time_s=0.01,
+                peak_bytes=2e6, param_count=1000, final_loss=0.1,
+                final_acc=0.9,
+                config={"kind": "mlp", "type_idx": 0, "lr": 1e-3,
+                        "batch_size": 32, "epochs": 3,
+                        "optimiser": "adam", "dataset_size": 1000},
+                hardware={"hw_peak_flops": 1e12, "hw_hbm_bw": 1e10,
+                          "hw_link_bw": 1e8, "hw_clock_ghz": 2.0,
+                          "hw_mem_bytes": 1e9, "hw_is_accelerated": 1.0,
+                          "hw_tdp_watts": 45.0})
+    base.update(over)
+    return ProfileRecord(**base)
+
+
+def test_profile_record_targets_default_unchanged():
+    rec = make_record()
+    assert set(rec.targets()) == {"flops", "macs", "total_time"}
+    ext = rec.targets(extended=True)
+    assert ext["step_time"] == 0.01
+    assert ext["peak_bytes"] == 2e6
+
+
+def test_targets_of_selector():
+    rec = make_record()
+    default = feat.targets_of(rec)
+    assert default.shape == (len(feat.TARGET_NAMES),)
+    ext = feat.targets_of(rec, feat.EXTENDED_TARGET_NAMES)
+    assert ext.shape == (5,)
+    np.testing.assert_array_equal(ext[:3], default)
+    picked = feat.targets_of(rec, ["total_time", "peak_bytes"])
+    assert picked[0] == np.float32(12.0)
+    assert picked[1] == np.float32(2e6)
+    with pytest.raises(KeyError, match="unknown target"):
+        feat.targets_of(rec, ["nope"])
+
+
+def test_records_to_dataset_extended_targets():
+    recs = [make_record(total_time_s=float(i + 1),
+                        peak_bytes=float(1e6 * (i + 1)))
+            for i in range(4)]
+    data = feat.records_to_dataset(
+        recs, targets=["total_time", "peak_bytes"])
+    assert data.y.shape == (4, 2)
+    assert data.target_names == ["total_time", "peak_bytes"]
+    np.testing.assert_array_equal(data.y[:, 1],
+                                  np.float32([1e6, 2e6, 3e6, 4e6]))
