@@ -1,0 +1,150 @@
+"""Fleet-engine benchmark: time-slabbed array engine vs host event loop.
+
+Sweeps fleet size (and with it offered load) through one simulated
+diurnal "day" — diurnal arrival intensity over a 3600 s horizon,
+per-node diurnal link tides stepped every virtual second — and runs the
+identical configuration through both engines:
+
+  * ``host``   — ``simulate_stream(engine="event")``: the reference
+                 event loop, one heap pop per arrival / finish / link
+                 tick
+  * ``fleet``  — ``simulate_stream(engine="fleet")``: the time-slabbed
+                 array engine (``repro.sim.fleet``) — batched arrival
+                 slabs, one vectorised ``step_batch`` per link process,
+                 singleton runs lowered to a jitted ``lax.scan``
+
+Both engines are bit-for-bit equal (tests/test_fleet.py), so the curve
+is pure engine overhead: events/sec vs fleet size.  Events here =
+arrivals + finishes + link ticks actually processed.
+
+Full (non-smoke) runs write ``BENCH_6.json`` at the repo root — the
+committed baseline — and assert the fleet engine clears a >= 20x
+speedup at the largest config (1e5 tasks, 256 nodes).  Every run
+(smoke included — the CI gate) asserts fleet is not slower than the
+host loop at the largest swept config.
+
+Run:  PYTHONPATH=src python benchmarks/bench_fleet.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):            # `python benchmarks/bench_...py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import emit
+from repro.core import scheduler as sch
+from repro.hw import EDGE_DEVICES
+from repro.sim import ClusterLinks, DiurnalLink, diurnal_arrivals, \
+    simulate_stream
+
+HORIZON_S = 3600.0                       # one simulated diurnal "day"
+LINK_DT = 1.0
+
+
+def make_cluster(n_nodes: int) -> list[sch.Node]:
+    specs = list(EDGE_DEVICES.values())
+    return [sch.Node(specs[j % len(specs)]) for j in range(n_nodes)]
+
+
+def make_tasks(n: int, seed: int = 0) -> list[sch.Task]:
+    rng = np.random.default_rng(seed)
+    return [sch.Task(f"t{i}", flops=float(rng.uniform(1e9, 5e11)),
+                     input_bytes=float(rng.uniform(1e4, 1e7)))
+            for i in range(n)]
+
+
+def make_links(n_nodes: int, horizon: float) -> ClusterLinks:
+    return ClusterLinks([DiurnalLink(4e7, amplitude=0.5,
+                                     period_s=horizon / 2,
+                                     noise_sigma=0.1, seed=2 + j)
+                         for j in range(n_nodes)])
+
+
+def run_engine(engine: str, n_tasks: int, n_nodes: int,
+               horizon: float) -> tuple[float, int]:
+    """(wall seconds, events processed) for one engine pass."""
+    arr = diurnal_arrivals(n_tasks / horizon * 1.2, horizon=horizon,
+                           amplitude=0.6, period_s=horizon / 2,
+                           seed=1)[:n_tasks]
+    tasks = make_tasks(len(arr), seed=0)
+    links = make_links(n_nodes, horizon)
+    nodes = make_cluster(n_nodes)
+    t0 = time.perf_counter()
+    tel = simulate_stream(tasks, arr, nodes, policy="min_min",
+                          links=links, link_update_dt=LINK_DT,
+                          engine=engine)
+    dt = time.perf_counter() - t0
+    assert len(tel.records) == len(arr)
+    # finish pops + arrival-batch pops + link-tick pops (the host loop's
+    # heap traffic; link_refreshes counts per-node updates, one tick
+    # touches every drifting node)
+    events = len(arr) + tel.counters.get("replans", 0) \
+        + int(tel.counters.get("link_refreshes", 0) / max(n_nodes, 1))
+    return dt, events
+
+
+def main(smoke: bool = False) -> list[dict]:
+    if smoke:
+        horizon = 120.0
+        cells = [(500, 8), (1500, 16)]
+        reps = 1
+    else:
+        horizon = HORIZON_S
+        cells = [(20000, 16), (50000, 64), (100000, 256)]
+        reps = 3
+    rows: list[dict] = []
+    largest = cells[-1]
+    # warm the jit caches outside the timed region (the scan compiles
+    # once per fleet width)
+    for n_nodes in sorted({n for _, n in cells}):
+        run_engine("fleet", 600, n_nodes, horizon)
+    for n_tasks, n_nodes in cells:
+        t_host = min(run_engine("event", n_tasks, n_nodes, horizon)[0]
+                     for _ in range(reps))
+        t_fleet, events = min(
+            run_engine("fleet", n_tasks, n_nodes, horizon)
+            for _ in range(reps))
+        speedup = t_host / t_fleet
+        for name, dt in (("host", t_host), ("fleet", t_fleet)):
+            rows.append({
+                "name": f"fleet_{name}_t{n_tasks}_n{n_nodes}",
+                "engine": name,
+                "n_tasks": n_tasks,
+                "n_nodes": n_nodes,
+                "horizon_s": horizon,
+                "events": events,
+                "events_per_sec": events / dt,
+                "total_ms": dt * 1e3,
+            })
+        rows[-1]["speedup_vs_host"] = speedup
+        if (n_tasks, n_nodes) == largest:
+            # the CI gate: the array engine must not lose to the heap
+            assert t_fleet <= t_host, (
+                f"fleet engine slower than the host event loop at the "
+                f"largest config (tasks={n_tasks}, n_nodes={n_nodes}): "
+                f"{t_fleet*1e3:.1f}ms vs {t_host*1e3:.1f}ms")
+            if not smoke:                # full-run acceptance bar
+                assert speedup >= 20.0, (
+                    f"fleet speedup {speedup:.1f}x < 20x at the largest "
+                    f"config (tasks={n_tasks}, n_nodes={n_nodes})")
+    if not smoke:                        # smoke must not clobber the baseline
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        with open(os.path.join(root, "BENCH_6.json"), "w") as f:
+            json.dump(rows, f, indent=1, default=float)
+    emit(rows, "fleet")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes / few reps for CI")
+    main(smoke=ap.parse_args().smoke)

@@ -1,0 +1,128 @@
+"""Collate the committed ``BENCH_*.json`` baselines into one table.
+
+Each PR that lands a perf tentpole commits its benchmark baseline at the
+repo root (``BENCH_3.json`` decision backends, ``BENCH_4.json``
+streaming re-planning, ``BENCH_5.json`` oracle serving, ``BENCH_6.json``
+fleet engine, ...).  This script reads every baseline, pulls out each
+one's headline comparison — the row with the largest ``speedup_vs_*``
+value plus its throughput figure — and renders the perf trajectory as a
+GitHub-flavoured markdown table.
+
+Run:            PYTHONPATH=src python benchmarks/report.py
+Update README:  PYTHONPATH=src python benchmarks/report.py --readme
+
+``--readme`` rewrites the block between the ``BENCH_TABLE`` markers in
+``README.md`` in place, so the committed table never drifts from the
+committed baselines.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+README = os.path.join(ROOT, "README.md")
+START = "<!-- BENCH_TABLE_START -->"
+END = "<!-- BENCH_TABLE_END -->"
+
+#: one line of context per baseline: what it measures, and what the
+#: speedup is measured against
+SUBSYSTEMS = {
+    3: ("decision backends", "decide_all jax/Pallas vs numpy"),
+    4: ("streaming re-planning", "incremental vs from-scratch per arrival"),
+    5: ("oracle serving", "lowered predictors vs host ensembles"),
+    6: ("fleet engine", "time-slabbed arrays vs host event loop"),
+}
+
+_THROUGHPUT_KEYS = ("events_per_sec", "decisions_per_s",
+                    "predictions_per_s")
+
+
+def _headline(rows: list[dict]) -> tuple[dict, str, float] | None:
+    """(row, speedup key, value) for the largest speedup in the file."""
+    best = None
+    for row in rows:
+        for key, val in row.items():
+            if key.startswith("speedup_vs_") and isinstance(
+                    val, (int, float)):
+                if best is None or val > best[2]:
+                    best = (row, key, float(val))
+    return best
+
+
+def _throughput(row: dict) -> str:
+    for key in _THROUGHPUT_KEYS:
+        if key in row:
+            unit = key.replace("_per_sec", "/s").replace("_per_s", "/s")
+            return f"{row[key]:,.0f} {unit}"
+    if "us_per_arrival" in row:
+        return f"{row['us_per_arrival']:.1f} us/arrival"
+    if "us_per_call" in row:
+        return f"{row['us_per_call']:.1f} us/call"
+    return "-"
+
+
+def collect() -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json"))):
+        num = int(re.search(r"BENCH_(\d+)\.json", path).group(1))
+        with open(path) as f:
+            rows = json.load(f)
+        head = _headline(rows)
+        if head is None:
+            continue
+        row, key, val = head
+        name, what = SUBSYSTEMS.get(num, (f"bench {num}", ""))
+        out.append({
+            "bench": f"BENCH_{num}",
+            "subsystem": name,
+            "comparison": what,
+            "config": row.get("name", "-"),
+            "speedup": val,
+            "throughput": _throughput(row),
+        })
+    return sorted(out, key=lambda r: r["bench"])
+
+
+def table(entries: list[dict]) -> str:
+    lines = [
+        "| baseline | subsystem | comparison | headline config "
+        "| speedup | throughput |",
+        "|---|---|---|---|---|---|",
+    ]
+    for e in entries:
+        lines.append(
+            f"| `{e['bench']}` | {e['subsystem']} | {e['comparison']} "
+            f"| `{e['config']}` | {e['speedup']:.1f}x "
+            f"| {e['throughput']} |")
+    return "\n".join(lines)
+
+
+def update_readme(tbl: str) -> None:
+    with open(README) as f:
+        text = f.read()
+    if START not in text or END not in text:
+        raise SystemExit(f"README.md is missing the {START} markers")
+    head, rest = text.split(START, 1)
+    _, tail = rest.split(END, 1)
+    with open(README, "w") as f:
+        f.write(f"{head}{START}\n{tbl}\n{END}{tail}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--readme", action="store_true",
+                    help="rewrite the README table block in place")
+    args = ap.parse_args()
+    tbl = table(collect())
+    print(tbl)
+    if args.readme:
+        update_readme(tbl)
+        print(f"\n[report] README.md table updated ({README})")
+
+
+if __name__ == "__main__":
+    main()

@@ -288,6 +288,26 @@ def decide_all(layers: Sequence[LayerCost], envs: EnvArrays,
                         scalar_cost=scalar[rows, s])
 
 
+def pad_envs(envs: EnvArrays, multiple: int) -> tuple[EnvArrays, int]:
+    """Pad the environment axis up to a multiple of ``multiple`` by
+    repeating the last row — the shard-friendly layout for splitting the
+    env axis across devices (padded rows compute real but discarded
+    decisions, so the maths stays row-wise identical).  Returns
+    ``(padded, original_length)``; the caller trims results back with
+    ``[:original_length]``."""
+    if multiple <= 0:
+        raise ValueError(f"multiple must be positive, got {multiple}")
+    e = len(envs)
+    pad = (-e) % multiple
+    if pad == 0:
+        return envs, e
+    if e == 0:
+        raise ValueError("cannot pad an empty EnvArrays (no row to "
+                         "repeat)")
+    idx = np.concatenate([np.arange(e), np.full(pad, e - 1, np.intp)])
+    return take_envs(envs, idx), e
+
+
 def take_envs(envs: EnvArrays, idx) -> EnvArrays:
     """Row-subset of an :class:`EnvArrays` (``idx`` is an integer index
     array or boolean mask over the environment axis)."""

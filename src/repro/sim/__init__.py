@@ -16,16 +16,19 @@ deterministic smoke, tier-1 adds the slow end-to-end run):
   * events    — virtual clock, event heap, arrival processes
   * state     — drifting links snapshotted into ``EnvArrays``
   * stream    — incremental online min-min/HEFT + the event loop
+  * fleet     — time-slabbed array-native engine (bit-for-bit twin of
+                the event loop; ``simulate_stream(..., engine="fleet")``)
   * pareto    — live Pareto-front split re-picking
   * telemetry — p50/p99, misses, energy, utilisation, re-plan counts
 """
 from repro.sim.events import (Clock, Event, EventQueue, diurnal_arrivals,
                               mmpp_arrivals, poisson_arrivals,
                               trace_arrivals)
+from repro.sim.fleet import decide_all_sharded, simulate_fleet
 from repro.sim.pareto import PARETO_OBJECTIVES, ParetoStreamScheduler
 from repro.sim.state import (ClusterLinks, DiurnalLink, DriftingEnv,
                              FixedLink, LinkProcess, RandomWalkLink,
-                             TwoStateLink)
+                             TwoStateLink, step_batch)
 from repro.sim.stream import StreamScheduler, simulate_stream
 from repro.sim.telemetry import TaskRecord, Telemetry
 
@@ -33,7 +36,7 @@ __all__ = [
     "Clock", "Event", "EventQueue", "poisson_arrivals", "trace_arrivals",
     "mmpp_arrivals", "diurnal_arrivals", "LinkProcess", "FixedLink",
     "RandomWalkLink", "TwoStateLink", "DiurnalLink", "DriftingEnv",
-    "ClusterLinks", "StreamScheduler", "simulate_stream",
-    "ParetoStreamScheduler", "PARETO_OBJECTIVES", "TaskRecord",
-    "Telemetry",
+    "ClusterLinks", "step_batch", "StreamScheduler", "simulate_stream",
+    "simulate_fleet", "decide_all_sharded", "ParetoStreamScheduler",
+    "PARETO_OBJECTIVES", "TaskRecord", "Telemetry",
 ]

@@ -92,16 +92,28 @@ class ParetoStreamScheduler:
         self.live: dict[int, SplitState] = {}
         self.total_repicks = 0
         self.total_switches = 0
+        self._env_key: Optional[tuple] = None    # one-slot env cache
+        self._env_cache = None
 
     # -- internals --------------------------------------------------------
-    def _envs(self, link_bw: float, input_bytes) -> "co.EnvArrays":
+    def _envs(self, link_bw, input_bytes) -> "co.EnvArrays":
+        """``link_bw`` may be a scalar (one observation for every row,
+        the event-loop path) or an ``[E]`` vector (per-row observations,
+        the fleet engine's slab-batched path).  A one-slot cache skips
+        the rebuild when consecutive calls see the same observation and
+        live set — the common static-link case."""
         ib = np.atleast_1d(np.asarray(input_bytes, np.float64))
-        return make_envs(self.device, self.edge,
-                         link_bw=np.full(ib.shape, float(link_bw)),
+        bw = np.broadcast_to(np.asarray(link_bw, np.float64), ib.shape)
+        key = (bw.tobytes(), ib.tobytes())
+        if key == self._env_key:
+            return self._env_cache
+        envs = make_envs(self.device, self.edge, link_bw=bw,
                          link_latency_s=self.link_latency_s,
                          input_bytes=ib)
+        self._env_key, self._env_cache = key, envs
+        return envs
 
-    def _pick_rows(self, layers, link_bw: float, input_bytes
+    def _pick_rows(self, layers, link_bw, input_bytes
                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """``(components [E, L+1, K], front [E, L+1], picks [E])`` for
         tasks sharing one layer chain at the current link state."""
@@ -142,6 +154,40 @@ class ParetoStreamScheduler:
         self.live[rid] = st
         self.telemetry.count("split_admissions")
         return st
+
+    def admit_batch(self, rids: Sequence[int],
+                    layers: Sequence[LayerCost], link_bw, *,
+                    input_bytes: Sequence[float], now: float = 0.0,
+                    deadlines_s: Optional[Sequence] = None
+                    ) -> list[SplitState]:
+        """Admit several tasks sharing one layer chain in ONE batched
+        ``components`` call — the per-row picks are bit-for-bit what
+        per-task :meth:`admit` calls at the same observations produce
+        (the cost models are row-wise over the environment axis).  Used
+        by the fleet engine to drain a whole slab's admissions at once.
+        """
+        rids = [int(r) for r in rids]
+        ib = [float(b) for b in input_bytes]
+        if deadlines_s is None:
+            deadlines_s = [None] * len(rids)
+        if not len(rids) == len(ib) == len(deadlines_s):
+            raise ValueError("rids, input_bytes and deadlines_s must "
+                             "have equal lengths")
+        _, front, picks = self._pick_rows(layers, link_bw, ib)
+        out = []
+        for k, rid in enumerate(rids):
+            if rid in self.live:
+                raise KeyError(f"rid {rid} already live")
+            st = SplitState(rid=rid, layers=layers, input_bytes=ib[k],
+                            deadline_s=deadlines_s[k],
+                            pick=int(picks[k]),
+                            admission_pick=int(picks[k]),
+                            front_size=int(front[k].sum()),
+                            history=[(float(now), int(picks[k]))])
+            self.live[rid] = st
+            self.telemetry.count("split_admissions")
+            out.append(st)
+        return out
 
     def on_link(self, link_bw: float, now: float = 0.0) -> int:
         """Re-pick every live task along its *current* front at the new

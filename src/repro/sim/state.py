@@ -35,12 +35,33 @@ from repro.hw import DeviceSpec
 @runtime_checkable
 class LinkProcess(Protocol):
     """A seeded bandwidth process: ``value`` is the current bytes/s,
-    ``step(dt)`` advances virtual time and returns the new value."""
+    ``step(dt)`` advances virtual time and returns the new value.
+
+    The concrete processes below additionally implement
+    ``step_batch(dt, n)`` — ``n`` steps of ``dt`` as one ``[n]`` array,
+    bit-for-bit the values (and the RNG stream) of ``n`` scalar
+    ``step(dt)`` calls.  It is intentionally *not* part of the protocol
+    so user-defined processes keep working; :func:`step_batch` below
+    falls back to the scalar loop for them."""
 
     @property
     def value(self) -> float: ...
 
     def step(self, dt: float) -> float: ...
+
+
+def step_batch(process: LinkProcess, dt: float, n: int) -> np.ndarray:
+    """``n`` steps of ``dt`` on ``process`` as one ``[n]`` float64 array.
+
+    Dispatches to the process's vectorized ``step_batch`` when it has
+    one (every process in this module does), else loops the scalar
+    ``step`` — either way the values and the process's end state are
+    bit-for-bit identical to ``n`` scalar calls."""
+    fn = getattr(process, "step_batch", None)
+    if fn is not None:
+        return np.asarray(fn(dt, int(n)), np.float64)
+    return np.asarray([process.step(dt) for _ in range(int(n))],
+                      np.float64)
 
 
 @dataclasses.dataclass
@@ -54,6 +75,9 @@ class FixedLink:
 
     def step(self, dt: float) -> float:
         return self.value
+
+    def step_batch(self, dt: float, n: int) -> np.ndarray:
+        return np.full(int(n), self.value, np.float64)
 
 
 @dataclasses.dataclass
@@ -84,6 +108,54 @@ class RandomWalkLink:
         self._log = min(max(self._log, math.log(self.min_bw)),
                         math.log(self.max_bw))
         return self.value
+
+    def step_batch(self, dt: float, n: int) -> np.ndarray:
+        if dt < 0:
+            raise ValueError(f"dt must be >= 0, got {dt}")
+        n = int(n)
+        if n == 0:
+            return np.zeros(0, np.float64)
+        # one vectorized draw is the same RNG stream as n scalar draws;
+        # cumsum is the same float ordering as sequential accumulation
+        draws = self._rng.normal(0.0, self.sigma * math.sqrt(dt), size=n)
+        logs = np.cumsum(np.concatenate(([self._log], draws)))[1:]
+        lo = math.log(self.min_bw)
+        hi = math.log(self.max_bw)
+        if lo <= logs.min() and logs.max() <= hi:
+            self._log = float(logs[-1])
+            # math.exp, not np.exp: numpy's SIMD exp rounds differently
+            # from libm on some platforms, and `value` uses math.exp
+            return np.asarray([math.exp(x) for x in logs], np.float64)
+        # a clip fired somewhere along the walk, so the later prefix
+        # sums are wrong.  Accept clip-free prefixes in vectorized
+        # chunks (doubling while clean, resetting after a clip): a
+        # mostly-clean walk stays O(n), a boundary-pinned one degrades
+        # to short lookaheads instead of a full scalar replay.
+        out = np.empty(n, np.float64)
+        log = self._log
+        k = 0
+        chunk = 32
+        while k < n:
+            m = min(chunk, n - k)
+            logs = np.cumsum(np.concatenate(([log],
+                                             draws[k:k + m])))[1:]
+            bad = (logs < lo) | (logs > hi)
+            if bad.any():
+                b = int(np.argmax(bad))
+                out[k:k + b] = [math.exp(x) for x in logs[:b]]
+                # cumsum[b] == cumsum[b-1] + draw exactly, so clipping
+                # it reproduces the scalar step
+                log = min(max(float(logs[b]), lo), hi)
+                out[k + b] = math.exp(log)
+                k += b + 1
+                chunk = 32
+            else:
+                out[k:k + m] = [math.exp(x) for x in logs]
+                log = float(logs[-1])
+                k += m
+                chunk = min(chunk * 2, 4096)
+        self._log = log
+        return out
 
 
 @dataclasses.dataclass
@@ -119,6 +191,13 @@ class TwoStateLink:
         self._remaining -= dt
         return self.value
 
+    def step_batch(self, dt: float, n: int) -> np.ndarray:
+        # the dwell chain consumes a data-dependent number of RNG draws
+        # per step, so there is no safe vectorized form — the scalar
+        # loop is the bit-for-bit reference
+        return np.asarray([self.step(dt) for _ in range(int(n))],
+                          np.float64)
+
 
 @dataclasses.dataclass
 class DiurnalLink:
@@ -153,6 +232,29 @@ class DiurnalLink:
                 self._rng.normal(0.0, self.noise_sigma)))
         return self.value
 
+    def step_batch(self, dt: float, n: int) -> np.ndarray:
+        if dt < 0:
+            raise ValueError(f"dt must be >= 0, got {dt}")
+        n = int(n)
+        if n == 0:
+            return np.zeros(0, np.float64)
+        # the time axis is the same float chain as repeated `_t += dt`
+        ts = np.cumsum(np.concatenate(([self._t],
+                                       np.full(n, float(dt)))))[1:]
+        if self.noise_sigma > 0:
+            noises = np.exp(self._rng.normal(0.0, self.noise_sigma,
+                                             size=n))
+            self._noise = float(noises[-1])
+        else:
+            noises = np.full(n, self._noise)
+        # np.sin matches math.sin bit-for-bit on this platform (unlike
+        # np.exp), so the tide vectorizes with the exact scalar
+        # expression `value` uses
+        tides = 1.0 + self.amplitude * np.sin(
+            2.0 * math.pi * ts / self.period_s + self.phase)
+        self._t = float(ts[-1])
+        return self.base_bw * tides * noises
+
 
 # --------------------------------------------------------------------------
 # Snapshots into the batch decision core's EnvArrays
@@ -166,15 +268,29 @@ class DriftingEnv:
     ``E = 1``) so every existing consumer — ``decide_all``,
     ``sweep_links``, the cost models, the jit/Pallas kernels — runs on
     live state without modification.
+
+    Snapshots are cached per (link observation, input-bytes) pair: a
+    static link snapshots each distinct input size exactly once however
+    many events fire, and any link movement invalidates the whole cache
+    (``EnvArrays`` is frozen, so sharing the cached instance is safe).
     """
     device: DeviceSpec
     edge: DeviceSpec
     link: LinkProcess
     link_latency_s: float = 0.005
     input_bytes: float = 0.0
+    _snap_bw: Optional[float] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+    _snap_cache: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
 
     def step(self, dt: float) -> float:
         return self.link.step(dt)
+
+    def step_batch(self, dt: float, n: int) -> np.ndarray:
+        """``[n]`` bandwidth trajectory: ``n`` link steps of ``dt``,
+        bit-for-bit the scalar ``step`` loop (see :func:`step_batch`)."""
+        return step_batch(self.link, dt, n)
 
     @property
     def link_bw(self) -> float:
@@ -183,10 +299,21 @@ class DriftingEnv:
     def snapshot(self, input_bytes=None) -> EnvArrays:
         ib = self.input_bytes if input_bytes is None else input_bytes
         ib = np.atleast_1d(np.asarray(ib, np.float64))
-        return make_envs(self.device, self.edge,
-                         link_bw=np.full(ib.shape, self.link.value),
-                         link_latency_s=self.link_latency_s,
-                         input_bytes=ib)
+        bw = self.link.value
+        if bw != self._snap_bw:          # link moved: every row is stale
+            self._snap_cache.clear()
+            self._snap_bw = bw
+        key = (ib.shape, ib.tobytes())
+        envs = self._snap_cache.get(key)
+        if envs is None:
+            if len(self._snap_cache) >= 512:
+                self._snap_cache.clear()
+            envs = make_envs(self.device, self.edge,
+                             link_bw=np.full(ib.shape, bw),
+                             link_latency_s=self.link_latency_s,
+                             input_bytes=ib)
+            self._snap_cache[key] = envs
+        return envs
 
 
 class ClusterLinks:
@@ -217,3 +344,10 @@ class ClusterLinks:
     def step(self, dt: float) -> np.ndarray:
         return np.asarray([p.step(dt) for p in self.processes],
                           np.float64)
+
+    def step_batch(self, dt: float, n: int) -> np.ndarray:
+        """``[n, N]`` bandwidth trajectory: every node advanced ``n``
+        steps of ``dt`` in one vectorized draw per process — row ``k``
+        is bit-for-bit what the ``k+1``-th ``step(dt)`` would return."""
+        return np.stack([step_batch(p, dt, n) for p in self.processes],
+                        axis=1)

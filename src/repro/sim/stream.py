@@ -234,8 +234,10 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                     split_planner=None,
                     split_env: Optional[DriftingEnv] = None,
                     split_layers: Optional[LayersFor] = None,
+                    split_cost=None, split_backend: str = "numpy",
                     rebalance: bool = False,
-                    telemetry: Optional[Telemetry] = None) -> Telemetry:
+                    telemetry: Optional[Telemetry] = None,
+                    engine: str = "event") -> Telemetry:
     """Run the full event-driven streaming simulation.
 
     Events, in virtual-time order with FIFO ties:
@@ -279,9 +281,37 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
     bit-transparent: placements are identical to running the same
     fitted model as a plain ``cost=PredictorCost(...)``.
 
+    Without a ``split_planner``, passing ``split_env=`` +
+    ``split_layers=`` enables *decide-at-admission*: each placed task's
+    offload split is decided once via :func:`repro.core.decisions.
+    decide_all` against the link observation at its arrival (optionally
+    under ``split_cost=``; ``split_backend=`` picks ``"numpy"`` /
+    ``"jax"`` / ``"pallas"`` / ``"sharded"``) and recorded on its
+    :class:`TaskRecord` — the commit-at-admission baseline the Pareto
+    planner is scored against, and the slab-batchable decision path the
+    fleet engine drains in bulk.
+
+    ``engine="fleet"`` dispatches the whole run to
+    :func:`repro.sim.fleet.simulate_fleet`, the time-slabbed array-native
+    twin of this loop — bit-for-bit equal telemetry in f64, orders of
+    magnitude faster at fleet scale, but rejecting the inherently
+    sequential features (``oracle=``, ``rebalance=True``, ``cost=``).
+
     Returns the filled :class:`Telemetry` (the scheduler's counters and
     one :class:`TaskRecord` per task).
     """
+    if engine == "fleet":
+        from repro.sim.fleet import simulate_fleet
+        return simulate_fleet(
+            tasks, arrivals, nodes, policy=policy, cost=cost,
+            oracle=oracle, service_time_fn=service_time_fn, links=links,
+            link_update_dt=link_update_dt, split_planner=split_planner,
+            split_env=split_env, split_layers=split_layers,
+            split_cost=split_cost, split_backend=split_backend,
+            rebalance=rebalance, telemetry=telemetry)
+    if engine != "event":
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "use 'event' or 'fleet'")
     telemetry = telemetry if telemetry is not None else Telemetry()
     if oracle is not None:
         if cost is not None:
@@ -295,7 +325,17 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
             raise ValueError("split_planner needs split_env= and "
                              "split_layers= (shared list or task -> "
                              "layers)")
+        if split_cost is not None:
+            raise ValueError("split_cost= only applies to the "
+                             "decide-at-admission path (no "
+                             "split_planner)")
         split_planner.telemetry = telemetry    # one record per run
+    decide_splits = (split_planner is None and split_env is not None
+                     and split_layers is not None)
+    if split_cost is not None and not decide_splits:
+        raise ValueError("split_cost= needs split_env= and "
+                         "split_layers= without a split_planner")
+    split_of: dict[int, int] = {}              # rid -> admission split
 
     def layers_for(task: sch.Task):
         if callable(split_layers):
@@ -310,8 +350,9 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
             f"arrivals must be [{len(tasks)}], got {arrivals.shape}")
 
     q = EventQueue()
-    for t, batch in _batches_by_arrival(arrivals):
-        q.push(t, "arrive", batch)
+    batches = _batches_by_arrival(arrivals)
+    q.push_batch([t for t, _ in batches], "arrive",
+                 [batch for _, batch in batches])
     drifting = (links is not None or split_env is not None) \
         and link_update_dt > 0
     if drifting:
@@ -360,6 +401,14 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                         rid, layers_for(a.task), split_env.link_bw,
                         input_bytes=a.task.input_bytes, now=now,
                         deadline_s=a.task.deadline_s)
+                elif decide_splits:
+                    from repro.sim.fleet import _split_decide
+                    plan = _split_decide(
+                        layers_for(a.task),
+                        split_env.snapshot(a.task.input_bytes),
+                        split_cost, split_backend)
+                    split_of[rid] = int(plan.splits[0])
+                    telemetry.count("split_decides")
         elif ev.kind == "finish":
             a = ev.payload
             if id(a) in completed or real_finish[id(a)] != now:
@@ -380,6 +429,8 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                 rec = split_planner.complete(rid, split_env.link_bw,
                                              now=now)
                 split, switches = rec["pick"], rec["switches"]
+            elif decide_splits:
+                split = split_of.pop(rid)
             telemetry.complete(TaskRecord(
                 name=a.task.name, arrived_s=float(arrivals[rid]),
                 started_s=a.start, finished_s=now, node=a.node,
