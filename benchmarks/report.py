@@ -35,6 +35,7 @@ SUBSYSTEMS = {
     4: ("streaming re-planning", "incremental vs from-scratch per arrival"),
     5: ("oracle serving", "lowered predictors vs host ensembles"),
     6: ("fleet engine", "time-slabbed arrays vs host event loop"),
+    7: ("edge contention", "incremental pool waits vs full recompute"),
 }
 
 _THROUGHPUT_KEYS = ("events_per_sec", "decisions_per_s",

@@ -1,0 +1,118 @@
+"""Edge contention and tail-aware offloading (ISSUE 7 headline demo).
+
+A Jetson Orin Nano streams inference jobs to a 2-server A100 edge pool
+over a heavy-tailed (Weibull, shape 0.7 < 1) wireless link, with MMPP
+quiet/burst arrivals that periodically saturate the pool.  Each arrival
+picks its offload split with ``decide_all`` under a ``QueueAwareCost``
+that prices the *live* pool wait — the only difference between the two
+policies is the objective:
+
+  * **mean-only**  minimises the expected completion (mean RTT, as
+    every classical offloading formulation does);
+  * **tail-aware** minimises the predicted p99 completion
+    (``CompositeCost(tail="p99")`` charges the p99-vs-mean RTT excess on
+    every offloading split).
+
+Both replay the *same* arrival trace and the *same* RTT sample stream,
+so the deadline-miss gap is pure decision quality: the mean-only policy
+offloads into the tail and pays for it; the tail-aware policy keeps
+deadline-critical work on-device, trading mean latency for the p99.
+
+Run:  PYTHONPATH=src python examples/contention_tails.py
+"""
+import numpy as np
+
+from repro.core import costs as co
+from repro.core import decisions as dec
+from repro.core.offload import LayerCost
+from repro.hw import get_device
+from repro.sim import ServerPool, WeibullRTT, mmpp_arrivals, spawn_streams
+
+DEADLINE_S = 0.35
+CAPACITY = 2
+HORIZON_S = 120.0
+
+
+def make_model(n: int = 8) -> list[LayerCost]:
+    # ~2.6e11 FLOPs: ~0.29 s on the Jetson, ~0.04 s on the A100
+    rng = np.random.default_rng(3)
+    return [LayerCost(f"l{i}", flops=float(rng.uniform(2e10, 4.5e10)),
+                      act_bytes=float(rng.uniform(2e5, 4e6)))
+            for i in range(n)]
+
+
+def replay(tail, layers, device, edge, arrivals, rtt_samples, rtt_model):
+    """One pass over the arrival trace under one objective; returns
+    per-task realised latencies and the offload count."""
+    base = co.CompositeCost(
+        weights={"latency_s": 1.0} if tail is None
+        else {"tail_latency_s": 1.0},
+        tail=tail, rtt=None if tail is None else rtt_model,
+        tail_alpha=0.99)
+    pool = ServerPool(CAPACITY)
+    cost = co.QueueAwareCost(base=base, edge_pool=pool, rtt=rtt_model)
+    envs = dec.make_envs(device, edge, link_bw=np.asarray([30e6]),
+                         link_latency_s=0.005,
+                         input_bytes=np.asarray([2e6]))
+    lat = np.empty(len(arrivals))
+    offloads = 0
+    for i, t in enumerate(arrivals):
+        t = float(t)
+        cost.set_now(t)
+        plan = dec.decide_all(layers, envs, cost=cost, backend="numpy")
+        dev_t = float(plan.device_time_s[0])
+        edge_t = float(plan.edge_time_s[0])
+        if edge_t > 0.0:
+            offloads += 1
+            # strip the priced wait + mean RTT back out of the plan's
+            # transfer term, then charge the actual draw and the actual
+            # queue: realised sojourn = device + link + queue + edge
+            xfer = float(plan.transfer_time_s[0]) - cost._edge_wait() \
+                + float(rtt_samples[i])
+            _, fin = pool.admit(t + dev_t + xfer, edge_t)
+            lat[i] = fin - t
+        else:
+            lat[i] = dev_t
+    return lat, offloads
+
+
+def main() -> None:
+    device = get_device("jetson-orin-nano")
+    edge = get_device("edge-server-a100")
+    layers = make_model()
+
+    arr_ss, rtt_ss = spawn_streams(4, 2)
+    arrivals = mmpp_arrivals([2.0, 40.0], [8.0, 3.0], horizon=HORIZON_S,
+                             seed=arr_ss)
+    rtt_model = WeibullRTT(shape=0.6, scale=0.02, seed=0)
+    rtt_samples = WeibullRTT(shape=0.6, scale=0.02,
+                             seed=rtt_ss).sample(len(arrivals))
+
+    print(f"== {len(arrivals)} tasks over {HORIZON_S:.0f}s of MMPP "
+          f"quiet/burst arrivals; {CAPACITY}-server edge pool; "
+          f"deadline {DEADLINE_S*1e3:.0f} ms")
+    print(f"   RTT: Weibull mean {rtt_model.mean()*1e3:.0f} ms, "
+          f"p99 {rtt_model.percentile(0.99)*1e3:.0f} ms — the tail is "
+          f"{rtt_model.percentile(0.99)/rtt_model.mean():.1f}x the mean")
+
+    results = {}
+    for tag, tail in (("mean-only", None), ("tail-aware(p99)", "p99"),
+                      ("tail-aware(cvar)", "cvar")):
+        lat, offloads = replay(tail, layers, device, edge, arrivals,
+                               rtt_samples, rtt_model)
+        misses = int((lat > DEADLINE_S).sum())
+        results[tag] = misses
+        print(f"== {tag:17s} misses {misses:3d} "
+              f"({misses / len(arrivals):6.2%})  "
+              f"mean {lat.mean()*1e3:6.1f} ms  "
+              f"p99 {np.percentile(lat, 99)*1e3:6.1f} ms  "
+              f"offloaded {offloads / len(arrivals):5.1%}")
+
+    assert results["tail-aware(p99)"] <= results["mean-only"]
+    print("== the mean-only policy offloads into the RTT tail and the "
+          "saturated pool; pricing the p99 keeps deadline-critical work "
+          "on-device — lower p99, fewer misses, at a mean-latency cost")
+
+
+if __name__ == "__main__":
+    main()

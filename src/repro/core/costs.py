@@ -205,6 +205,16 @@ class AccelSpec:
     price_per_edge_s: float = 0.0
     price_per_gb: float = 0.0
     deadline_s: float = float("inf")
+    #: predicted queueing delay at the edge pool (s) — added to the
+    #: latency of every offloading split (all but the run-local last
+    #: column).  0.0 keeps the historical zero-contention math exactly.
+    queue_wait_s: float = 0.0
+    #: tail-aware objective: predicted excess of the tail statistic
+    #: (p99 or CVaR) of the RTT distribution over its mean, and the
+    #: scalarisation weight of the resulting ``tail_latency_s``
+    #: objective.  Both 0.0 → the tail column is dropped entirely.
+    tail_excess_s: float = 0.0
+    tail_weight: float = 0.0
     #: objective names the resulting DecisionPlan carries (a prefix view
     #: of the canonical stack: just latency, or all four)
     objectives: tuple[str, ...] = ("latency_s",)
@@ -416,6 +426,11 @@ class CompositeCost:
                                compute at ``edge_tdp_watts``
       * ``price``            — billed edge seconds + shipped gigabytes
       * ``deadline_slack_s`` — ``max(0, latency - deadline_s)`` overrun
+      * ``tail_latency_s``   — only when ``tail=`` is set: predicted
+                               tail completion (latency + the p99/CVaR_α
+                               excess of ``rtt`` over its mean for every
+                               offloading split), so schedulers can
+                               trade tail latency against energy/price
 
     ``scalarize`` applies ``weights`` (objective name → weight; ``None``
     means equal weights); :meth:`pareto` extracts the non-dominated splits
@@ -428,6 +443,12 @@ class CompositeCost:
     price_per_edge_s: float = 0.0
     price_per_gb: float = 0.0
     deadline_s: float = np.inf
+    #: ``"p99"`` or ``"cvar"`` turns on the fifth ``tail_latency_s``
+    #: objective over the ``rtt`` delay process; ``None`` (default)
+    #: keeps the historical 4-objective stack byte-identical.
+    tail: Optional[str] = None
+    tail_alpha: float = 0.99
+    rtt: Optional[object] = None         # a queueing.DelayProcess
 
     objectives: ClassVar[tuple[str, ...]] = (
         "latency_s", "energy_j", "price", "deadline_slack_s")
@@ -439,6 +460,26 @@ class CompositeCost:
                 "expose latency_parts(layers, envs) — the energy/price/"
                 "slack objectives need the (device, transfer, edge) "
                 "latency decomposition, not just totals")
+        if self.tail is not None:
+            if self.tail not in ("p99", "cvar"):
+                raise ValueError(f"tail must be 'p99' or 'cvar', "
+                                 f"got {self.tail!r}")
+            if self.rtt is None:
+                raise ValueError(
+                    "tail= needs an rtt= delay process (e.g. "
+                    "repro.sim.queueing.WeibullRTT) to take the tail "
+                    "statistic over")
+            # shadow the ClassVar: this instance carries five objectives
+            self.objectives = CompositeCost.objectives + (
+                "tail_latency_s",)
+
+    def tail_excess_s(self) -> float:
+        """Predicted excess of the tail RTT statistic over its mean —
+        the per-offload premium the ``tail_latency_s`` column adds."""
+        if self.tail is None:
+            return 0.0
+        return max(self.rtt.tail_stat(self.tail, self.tail_alpha)
+                   - self.rtt.mean(), 0.0)
 
     def components(self, layers, envs) -> np.ndarray:
         dev_t, xfer_t, edge_t = self.base.latency_parts(layers, envs)
@@ -450,7 +491,12 @@ class CompositeCost:
         price = edge_t * self.price_per_edge_s \
             + transfer_bytes(layers, envs) / 1e9 * self.price_per_gb
         slack = np.maximum(total - self.deadline_s, 0.0)
-        return np.stack([total, energy, price, slack], axis=-1)
+        if self.tail is None:
+            return np.stack([total, energy, price, slack], axis=-1)
+        tail_col = total.copy()
+        tail_col[..., :-1] += self.tail_excess_s()  # last split: no RTT
+        return np.stack([total, energy, price, slack, tail_col],
+                        axis=-1)
 
     def scalarize(self, components: np.ndarray) -> np.ndarray:
         return scalarize_weighted(components, self.objectives, self.weights)
@@ -478,11 +524,13 @@ class CompositeCost:
                 "objective stack would be silently overwritten")
         w = weight_vector(self.objectives, self.weights)
         return dataclasses.replace(
-            base, weights=tuple(float(x) for x in w),
+            base, weights=tuple(float(x) for x in w[:4]),
             radio_watts=self.radio_watts,
             price_per_edge_s=self.price_per_edge_s,
             price_per_gb=self.price_per_gb,
             deadline_s=float(self.deadline_s),
+            tail_excess_s=float(self.tail_excess_s()),
+            tail_weight=float(w[4]) if self.tail is not None else 0.0,
             objectives=self.objectives)
 
 
@@ -490,6 +538,89 @@ def _tdp_or_zero(tdp: Optional[np.ndarray], n: int) -> np.ndarray:
     if tdp is None:
         return np.zeros(n)
     return np.asarray(tdp, np.float64)
+
+
+# --------------------------------------------------------------------------
+# Queue-aware cost: live pool state folded into any cost model
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class QueueAwareCost:
+    """Sojourn-aware wrapper: predicted completion = wait + service (+
+    transfer) over any base :class:`CostModel`.
+
+    Two seams feed the predicted queueing delay:
+
+      * ``edge_pool`` — a live :class:`repro.sim.queueing.ServerPool`
+        for the edge server the split decision offloads to; its current
+        ``wait(now)`` is added to every offloading split (all columns
+        but the run-local last one), and re-read on every call so the
+        wrapper tracks pool state with zero bookkeeping;
+      * ``pools`` — a :class:`repro.sim.queueing.NodePools` for the
+        placement path: :meth:`task_matrix` adds per-node waits to the
+        base ETC matrix, so min-min/HEFT see contention directly.
+
+    ``rtt`` (a ``DelayProcess``) optionally adds the *mean* RTT to
+    offloading latencies; pair with ``CompositeCost(tail=...)`` when the
+    tail, not the mean, should drive the pick.  Advance virtual time
+    with :meth:`set_now` (the simulators do this before each decision).
+    """
+
+    base: CostModel = dataclasses.field(default_factory=AnalyticCost)
+    edge_pool: Optional[object] = None      # queueing.ServerPool
+    pools: Optional[object] = None          # queueing.NodePools
+    rtt: Optional[object] = None            # queueing.DelayProcess
+    wait_s: float = 0.0                     # static extra wait (tests)
+    now: float = 0.0
+
+    def set_now(self, now: float) -> None:
+        self.now = float(now)
+
+    @property
+    def objectives(self) -> tuple[str, ...]:
+        return self.base.objectives
+
+    def _edge_wait(self) -> float:
+        w = float(self.wait_s)
+        if self.edge_pool is not None:
+            w += float(self.edge_pool.wait(self.now))
+        if self.rtt is not None:
+            w += float(self.rtt.mean())
+        return w
+
+    def components(self, layers, envs) -> np.ndarray:
+        comp = np.array(self.base.components(layers, envs), np.float64)
+        w = self._edge_wait()
+        if w > 0.0:
+            comp[..., :-1, 0] += w          # offloading splits wait
+        return comp
+
+    def scalarize(self, components: np.ndarray) -> np.ndarray:
+        return self.base.scalarize(components)
+
+    def latency_parts(self, layers, envs):
+        dev_t, xfer_t, edge_t = self.base.latency_parts(layers, envs)
+        w = self._edge_wait()
+        if w > 0.0:
+            xfer_t = np.array(xfer_t, np.float64)
+            xfer_t[..., :-1] += w           # book the wait with transfer
+        return dev_t, xfer_t, edge_t
+
+    def task_matrix(self, tasks, nodes) -> np.ndarray:
+        etc = etc_from_cost(self.base, tasks, nodes)
+        extra = np.zeros(etc.shape[1], np.float64)
+        if self.pools is not None:
+            extra = extra + self.pools.waits(self.now)
+        if self.rtt is not None:
+            extra = extra + float(self.rtt.mean())
+        if self.wait_s:
+            extra = extra + float(self.wait_s)
+        return etc + extra[None, :]
+
+    def accel_spec(self) -> AccelSpec:
+        spec = lower_to_accel(self.base)
+        return dataclasses.replace(
+            spec, queue_wait_s=float(spec.queue_wait_s
+                                     + self._edge_wait()))
 
 
 # --------------------------------------------------------------------------

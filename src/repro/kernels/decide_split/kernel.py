@@ -46,7 +46,12 @@ from jax.experimental.pallas import tpu as pltpu
 # spec vector layout (SMEM): scalar parameters of the lowered cost model
 SPEC_RADIO, SPEC_PPS, SPEC_PPG, SPEC_DEADLINE = range(4)
 SPEC_W0, SPEC_W1, SPEC_W2, SPEC_W3, SPEC_ETOT = range(4, 9)
-SPEC_LEN = 9
+# queue-aware extension: predicted edge-pool wait added to every
+# offloading split's latency, and the tail_latency_s objective
+# (latency + tail-RTT excess on offloading splits) weighted by W4.
+# All three default to 0.0, which reproduces the 9-slot kernel math.
+SPEC_WAIT, SPEC_TEXC, SPEC_W4 = range(9, 12)
+SPEC_LEN = 12
 
 
 def _kernel(spec_ref, dcum_ref, ecum_ref, bvec_ref, dev_div_ref,
@@ -83,8 +88,16 @@ def _kernel(spec_ref, dcum_ref, ecum_ref, bvec_ref, dev_div_ref,
     price = edge_t * spec_ref[SPEC_PPS] \
         + ship / 1e9 * spec_ref[SPEC_PPG]
     slack = jnp.maximum(total - spec_ref[SPEC_DEADLINE], 0.0)
-    scal = spec_ref[SPEC_W0] * total + spec_ref[SPEC_W1] * energy \
+    # queue-aware latency: offloading splits pay the edge-pool wait in
+    # the latency objective only (energy/price/slack come from the base
+    # model, exactly as QueueAwareCost bumps column 0 on the host);
+    # SPEC_WAIT == 0.0 adds literal zero — bit-identical historical math
+    lat_col = total + jnp.where(is_last, 0.0, spec_ref[SPEC_WAIT])
+    scal = spec_ref[SPEC_W0] * lat_col + spec_ref[SPEC_W1] * energy \
         + spec_ref[SPEC_W2] * price + spec_ref[SPEC_W3] * slack
+    # tail_latency_s objective: total + tail-RTT excess where offloading
+    scal = scal + spec_ref[SPEC_W4] * (
+        total + jnp.where(is_last, 0.0, spec_ref[SPEC_TEXC]))
     scal = jnp.where(cols < n_splits, scal, jnp.inf)     # mask split padding
 
     local_min = jnp.min(scal, axis=1)[:, None]           # [BE, 1]
@@ -154,7 +167,8 @@ def decide_split_kernel(dcum, ecum, bvec, dev_div, edge_div, bw, lat, inp,
 
 
 def pack_spec(weights, radio_watts=0.0, price_per_edge_s=0.0,
-              price_per_gb=0.0, deadline_s=np.inf, edge_total=0.0):
+              price_per_gb=0.0, deadline_s=np.inf, edge_total=0.0,
+              queue_wait_s=0.0, tail_excess_s=0.0, tail_weight=0.0):
     """Build the [SPEC_LEN] f32 scalar vector the kernel reads from SMEM
     (``edge_total`` is ``ecum[-1]``, the full edge-side prefix)."""
     out = np.zeros(SPEC_LEN, np.float32)
@@ -164,4 +178,7 @@ def pack_spec(weights, radio_watts=0.0, price_per_edge_s=0.0,
     out[SPEC_DEADLINE] = deadline_s
     out[SPEC_W0:SPEC_W0 + 4] = weights
     out[SPEC_ETOT] = edge_total
+    out[SPEC_WAIT] = queue_wait_s
+    out[SPEC_TEXC] = tail_excess_s
+    out[SPEC_W4] = tail_weight
     return out

@@ -166,6 +166,50 @@ def _composite_decide(parts, tb, dev_w, edge_w, spec: AccelSpec):
         xfer[rows, s], edge_cum[rows, s]
 
 
+def _queue_decide(parts, tb, dev_w, edge_w, spec: AccelSpec):
+    """Queue-/tail-aware decide over jitted parts.  Eager like
+    :func:`_composite_decide`; mirrors the host ``QueueAwareCost``
+    (edge-pool wait bumps the latency objective on offloading splits)
+    and ``CompositeCost(tail=...)`` (fifth ``tail_latency_s`` column =
+    total + tail-RTT excess on offloading splits) op-for-op."""
+    dev_cum, xfer, edge_cum = parts
+    total = dev_cum + xfer + edge_cum
+    n_obj = len(spec.objectives)
+    wait = spec.queue_wait_s
+    rows = jnp.arange(dev_cum.shape[0])
+    if n_obj == 1:                       # latency-only base + queue wait
+        lat_col = jnp.concatenate(
+            [total[:, :-1] + wait, total[:, -1:]], axis=1)
+        s = jnp.argmin(lat_col, axis=1)
+        xfer_q = jnp.concatenate(
+            [xfer[:, :-1] + wait, xfer[:, -1:]], axis=1)
+        scal_s = lat_col[rows, s]
+        return s, scal_s[:, None], scal_s, dev_cum[rows, s], \
+            xfer_q[rows, s], edge_cum[rows, s]
+    energy = dev_cum * dev_w[:, None] + xfer * spec.radio_watts \
+        + edge_cum * edge_w[:, None]
+    price = edge_cum * spec.price_per_edge_s + tb / 1e9 * spec.price_per_gb
+    slack = jnp.maximum(total - spec.deadline_s, 0.0)
+    cols = [total, energy, price, slack]
+    weights = list(spec.weights)
+    if n_obj == 5:                       # tail_latency_s objective
+        cols.append(jnp.concatenate(
+            [total[:, :-1] + spec.tail_excess_s, total[:, -1:]], axis=1))
+        weights.append(spec.tail_weight)
+    if wait != 0.0:
+        cols[0] = jnp.concatenate(
+            [total[:, :-1] + wait, total[:, -1:]], axis=1)
+        xfer = jnp.concatenate(
+            [xfer[:, :-1] + wait, xfer[:, -1:]], axis=1)
+    comp = jnp.stack(cols, axis=-1)
+    scal = comp[..., 0] * weights[0]
+    for k in range(1, n_obj):
+        scal = scal + comp[..., k] * weights[k]
+    s = jnp.argmin(scal, axis=1)
+    return s, comp[rows, s], scal[rows, s], dev_cum[rows, s], \
+        xfer[rows, s], edge_cum[rows, s]
+
+
 def _plan(cost, spec: AccelSpec, s, dev_s, xfer_s, edge_s, total_s,
           comp_s=None, scal_s=None) -> DecisionPlan:
     """Assemble the DecisionPlan mirroring the numpy ``decide_all``
@@ -192,12 +236,15 @@ def _plan(cost, spec: AccelSpec, s, dev_s, xfer_s, edge_s, total_s,
 
 def _decide_jax(layers, flops, act, env_arrs, spec: AccelSpec, cost):
     dev, edge, bw, lat, inp, dev_w, edge_w = env_arrs
+    # queue-wait / tail objectives take the eager extended path; when
+    # both are off the historical branches run untouched (bit-for-bit)
+    queued = (spec.queue_wait_s != 0.0 or len(spec.objectives) > 4)
     with enable_x64():
         if spec.lowered is not None:
             t_dev, t_edge = spec.lowered.times(layers)
             pargs = tuple(jnp.asarray(x) for x in
                           (t_dev, t_edge, act, bw, lat, inp))
-            if spec.objectives == ("latency_s",):
+            if spec.objectives == ("latency_s",) and not queued:
                 s, total_s, dev_s, xfer_s, edge_s = _decide_predictor(
                     *pargs)
                 return _plan(cost, spec, s, dev_s, xfer_s, edge_s, total_s)
@@ -205,13 +252,14 @@ def _decide_jax(layers, flops, act, env_arrs, spec: AccelSpec, cost):
         else:
             args = tuple(jnp.asarray(x) for x in
                          (flops, act, dev, edge, bw, lat, inp))
-            if spec.objectives == ("latency_s",):
+            if spec.objectives == ("latency_s",) and not queued:
                 s, total_s, dev_s, xfer_s, edge_s = _decide_latency(
                     *args, spec.efficiency)
                 return _plan(cost, spec, s, dev_s, xfer_s, edge_s, total_s)
             dev_cum, xfer, edge_cum, tb = _latency_parts(*args,
                                                          spec.efficiency)
-        s, comp_s, scal_s, dev_s, xfer_s, edge_s = _composite_decide(
+        decide = _queue_decide if queued else _composite_decide
+        s, comp_s, scal_s, dev_s, xfer_s, edge_s = decide(
             (dev_cum, xfer, edge_cum), tb, jnp.asarray(dev_w),
             jnp.asarray(edge_w), spec)
         total_s = np.asarray(comp_s)[:, 0]
@@ -245,7 +293,10 @@ def _decide_pallas(layers, flops, act, env_arrs, spec: AccelSpec, cost,
                          radio_watts=spec.radio_watts,
                          price_per_edge_s=spec.price_per_edge_s,
                          price_per_gb=spec.price_per_gb,
-                         deadline_s=spec.deadline_s, edge_total=etot)
+                         deadline_s=spec.deadline_s, edge_total=etot,
+                         queue_wait_s=spec.queue_wait_s,
+                         tail_excess_s=spec.tail_excess_s,
+                         tail_weight=spec.tail_weight)
     f32 = [jnp.asarray(x, jnp.float32)
            for x in (dcum, ecum, bvec, dev_div, edge_div, bw, lat, inp,
                      dev_w, edge_w)]
@@ -259,14 +310,32 @@ def _decide_pallas(layers, flops, act, env_arrs, spec: AccelSpec, cost,
     ship = np.where(s == n, 0.0, np.where(s == 0, inp, bvec[s]))
     xfer_s = np.where(s == n, 0.0, lat + ship / np.maximum(bw, 1.0))
     total_s = dev_s + xfer_s + edge_s
+    # queue wait bumps the latency objective (and the booked transfer)
+    # on offloading splits — zero when no pool is attached
+    bump = np.where(s == n, 0.0, spec.queue_wait_s) \
+        if spec.queue_wait_s != 0.0 else None
     if cost is None or spec.objectives == ("latency_s",):
+        if bump is not None:
+            total_s = total_s + bump
+            xfer_s = xfer_s + bump
+            return _plan(cost, spec, s, dev_s, xfer_s, edge_s, total_s,
+                         total_s[:, None], total_s)
         return _plan(cost, spec, s, dev_s, xfer_s, edge_s, total_s)
     energy = dev_s * dev_w + xfer_s * spec.radio_watts + edge_s * edge_w
     price = edge_s * spec.price_per_edge_s + ship / 1e9 * spec.price_per_gb
     slack = np.maximum(total_s - spec.deadline_s, 0.0)
-    comp_s = np.stack([total_s, energy, price, slack], axis=-1)
-    scal_s = scalarize_weighted(comp_s, ACCEL_OBJECTIVES,
-                                dict(zip(ACCEL_OBJECTIVES, spec.weights)))
+    cols = [total_s, energy, price, slack]
+    weights = list(spec.weights)
+    if len(spec.objectives) > 4:         # tail_latency_s objective
+        cols.append(total_s + np.where(s == n, 0.0, spec.tail_excess_s))
+        weights.append(spec.tail_weight)
+    if bump is not None:
+        cols[0] = total_s + bump
+        xfer_s = xfer_s + bump
+        total_s = cols[0]
+    comp_s = np.stack(cols, axis=-1)
+    scal_s = scalarize_weighted(comp_s, spec.objectives,
+                                dict(zip(spec.objectives, weights)))
     return _plan(cost, spec, s, dev_s, xfer_s, edge_s, total_s,
                  comp_s, scal_s)
 
@@ -300,7 +369,7 @@ def decide_accel(layers: Sequence[LayerCost], envs: EnvArrays,
             return _plan(cost, spec, np.zeros(0, np.int64), empty, empty,
                          empty, empty,
                          None if spec.objectives == ("latency_s",)
-                         else np.zeros((0, len(ACCEL_OBJECTIVES))),
+                         else np.zeros((0, len(spec.objectives))),
                          empty)
         return _decide_pallas(layers, flops, act, env_arrs, spec, cost,
                               interpret, block_e, block_s)

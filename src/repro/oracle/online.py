@@ -255,16 +255,20 @@ class OnlineOracle:
 
     def observe_task(self, task, spec, realised_s: float,
                      predicted_s: Optional[float] = None,
-                     now: float = 0.0) -> dict:
+                     now: float = 0.0,
+                     extra_transfer_s: float = 0.0) -> dict:
         """Streaming-scheduler adapter: featurise a completed
         :class:`repro.core.scheduler.Task` on the node ``spec`` it ran
         on and ingest its realised service time.  The refit target is
         the compute component (realised minus the analytic input
-        transfer), matching what the regressor predicts.
+        transfer and any ``extra_transfer_s`` network delay — e.g. a
+        sampled heavy-tailed RTT), matching what the regressor
+        predicts.
         """
         layers = [LayerCost(task.name, flops=task.flops, act_bytes=0.0)]
         feats = self.feature_fn(layers, spec)[0]
-        transfer = float(task.input_bytes) / max(float(spec.link_bw), 1.0)
+        transfer = float(task.input_bytes) / max(float(spec.link_bw), 1.0) \
+            + float(extra_transfer_s)
         return self.observe(feats, realised_s, predicted_s,
                             refit_y=max(float(realised_s) - transfer, 0.0),
                             now=now)

@@ -19,13 +19,19 @@ deterministic smoke, tier-1 adds the slow end-to-end run):
   * fleet     — time-slabbed array-native engine (bit-for-bit twin of
                 the event loop; ``simulate_stream(..., engine="fleet")``)
   * pareto    — live Pareto-front split re-picking
-  * telemetry — p50/p99, misses, energy, utilisation, re-plan counts
+  * queueing  — finite-capacity server pools, heavy-tailed RTT
+                processes, Erlang-C/M/M/c validation closed forms
+  * telemetry — p50/p99, misses, energy, utilisation, queue waits,
+                re-plan counts
 """
 from repro.sim.events import (Clock, Event, EventQueue, diurnal_arrivals,
                               mmpp_arrivals, poisson_arrivals,
                               trace_arrivals)
 from repro.sim.fleet import decide_all_sharded, simulate_fleet
 from repro.sim.pareto import PARETO_OBJECTIVES, ParetoStreamScheduler
+from repro.sim.queueing import (DelayProcess, LognormalRTT, NodePools,
+                                ServerPool, WeibullRTT, erlang_c,
+                                mm1_sojourn, mmc_sojourn, spawn_streams)
 from repro.sim.state import (ClusterLinks, DiurnalLink, DriftingEnv,
                              FixedLink, LinkProcess, RandomWalkLink,
                              TwoStateLink, step_batch)
@@ -38,5 +44,7 @@ __all__ = [
     "RandomWalkLink", "TwoStateLink", "DiurnalLink", "DriftingEnv",
     "ClusterLinks", "step_batch", "StreamScheduler", "simulate_stream",
     "simulate_fleet", "decide_all_sharded", "ParetoStreamScheduler",
-    "PARETO_OBJECTIVES", "TaskRecord", "Telemetry",
+    "PARETO_OBJECTIVES", "TaskRecord", "Telemetry", "ServerPool",
+    "NodePools", "DelayProcess", "WeibullRTT", "LognormalRTT",
+    "erlang_c", "mm1_sojourn", "mmc_sojourn", "spawn_streams",
 ]

@@ -8,6 +8,14 @@ processes are seeded and fully deterministic — the same seed replays the
 same run, which is what makes the sim smoke tests and the incremental-
 vs-from-scratch benchmarks reproducible.
 
+Every ``seed=`` parameter accepts ``int | np.random.SeedSequence``.
+Passing an ``int`` reproduces the historical stream bit-for-bit
+(``default_rng(int)`` builds ``SeedSequence(int)`` internally); for
+multi-process runs, spawn independent children of the run seed with
+:func:`repro.sim.queueing.spawn_streams` and hand one child to each
+process (arrivals, link drift, RTT) — adding a new process then never
+perturbs the draws of existing ones.
+
 Arrival processes:
 
   * :func:`poisson_arrivals`  — homogeneous Poisson (exponential gaps)
@@ -27,9 +35,13 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Any, Iterable, Optional
+from typing import Any, Iterable, Optional, Union
 
 import numpy as np
+
+#: processes accept either a plain int (historical stream, unchanged)
+#: or a spawned ``SeedSequence`` child (independent stream)
+Seed = Union[int, np.random.SeedSequence]
 
 
 class Clock:
@@ -114,7 +126,7 @@ class EventQueue:
 # Arrival processes (all return sorted float64 arrays of absolute times)
 # --------------------------------------------------------------------------
 def poisson_arrivals(rate: float, *, n: Optional[int] = None,
-                     horizon: Optional[float] = None, seed: int = 0,
+                     horizon: Optional[float] = None, seed: "Seed" = 0,
                      start: float = 0.0) -> np.ndarray:
     """Homogeneous Poisson arrivals at ``rate`` events/s.
 
@@ -153,7 +165,7 @@ def trace_arrivals(times: Iterable[float]) -> np.ndarray:
     return t
 
 
-def mmpp_arrivals(rates, dwell_s, *, horizon: float, seed: int = 0,
+def mmpp_arrivals(rates, dwell_s, *, horizon: float, seed: "Seed" = 0,
                   start: float = 0.0) -> np.ndarray:
     """Markov-modulated Poisson arrivals over ``[0, horizon)``.
 
@@ -184,7 +196,7 @@ def mmpp_arrivals(rates, dwell_s, *, horizon: float, seed: int = 0,
 
 def diurnal_arrivals(base_rate: float, *, horizon: float,
                      amplitude: float = 0.5, period_s: float = 60.0,
-                     phase: float = 0.0, seed: int = 0,
+                     phase: float = 0.0, seed: "Seed" = 0,
                      start: float = 0.0) -> np.ndarray:
     """Sinusoidal-rate Poisson arrivals (the day/night load curve).
 

@@ -225,6 +225,8 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
                    split_layers=None, split_cost=None,
                    split_backend: str = "numpy",
                    rebalance: bool = False,
+                   pools=None, rtt=None,
+                   saturation_threshold: Optional[float] = None,
                    telemetry: Optional[Telemetry] = None) -> Telemetry:
     """Time-slabbed streaming simulation, bit-for-bit (f64) equal to
     ``simulate_stream(..., engine="event")`` on every supported
@@ -232,10 +234,26 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
     array ops and why ``oracle=`` / ``rebalance=`` / ``cost=`` are
     rejected.  Normally reached via ``simulate_stream(...,
     engine="fleet")``.
+
+    ``pools=`` routes placements through finite-capacity
+    :class:`repro.sim.queueing.NodePools` (realised c-server busy
+    state; the singleton-scan fast path is skipped since placements
+    then depend on realised admissions), and ``rtt=`` adds one
+    heavy-tailed network delay sample per task — both reproduce the
+    host engine's draws exactly.  ``saturation_threshold=`` is
+    rejected: the utilisation-edge trigger is inherently per-event.
     """
     if policy not in ("min_min", "heft"):
         raise ValueError(f"unknown policy {policy!r}; "
                          "use 'min_min' or 'heft'")
+    if saturation_threshold is not None:
+        raise ValueError(
+            "engine='fleet' does not support saturation_threshold= — "
+            "the pool-utilisation edge trigger fires mid-timeline, "
+            "which is inherently per-event; use engine='event'")
+    if pools is not None and len(pools) != len(nodes):
+        raise ValueError(f"pools carries {len(pools)} pools for "
+                         f"{len(nodes)} nodes")
     if oracle is not None:
         raise ValueError(
             "engine='fleet' does not support oracle= — online oracle "
@@ -291,7 +309,11 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
                           np.float64) * DEFAULT_EFFICIENCY
     spec_bw0 = np.asarray([s.link_bw for s in specs0], np.float64)
     tdp = np.asarray([s.tdp_watts for s in specs0], np.float64)
-    avail = np.asarray([n.available_at for n in nodes], np.float64).copy()
+    # with pools the availability vector IS the pools' earliest-free
+    # cache (admissions update it in place), exactly as in the host
+    # StreamScheduler
+    avail = pools.avail if pools is not None else \
+        np.asarray([n.available_at for n in nodes], np.float64).copy()
     flops_t = np.asarray([t.flops for t in tasks], np.float64)
     ib_t = np.asarray([t.input_bytes for t in tasks], np.float64)
 
@@ -360,6 +382,30 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
         eff_rows = spec_bw0[None, :]
     bwc_rows = np.maximum(eff_rows, 1.0)
 
+    # -- placement-time node specs (original spec until the link process
+    # first changes, then the drifted bandwidth), cached per (node, bw)
+    spec_cache: dict[tuple, object] = {}
+
+    def spec_at(j: int, seg: int):
+        bw = float(eff_rows[seg if links is not None else 0, j])
+        spec = spec_cache.get((j, bw))
+        if spec is None:
+            spec = specs0[j] if bw == specs0[j].link_bw else \
+                dataclasses.replace(specs0[j], link_bw=bw)
+            spec_cache[(j, bw)] = spec
+        return spec
+
+    def pool_admit(rid: int, j: int, t: float, etc_v: float,
+                   seg: int) -> tuple[float, float]:
+        """StreamScheduler._admit op-for-op: realised service drawn at
+        admission, pool updates ``avail`` in place."""
+        service = etc_v
+        if service_time_fn is not None:
+            start_pred = max(pools.pools[j].next_free(), t)
+            service = float(service_time_fn(tasks[rid], spec_at(j, seg),
+                                            etc_v, start_pred))
+        return pools.admit(j, t, service)
+
     # -- placements: per slab, ETC rows in one broadcast; the min-min /
     # HEFT rounds replicate StreamScheduler.on_arrivals op-for-op
     seg_of_batch = np.searchsorted(tick_times[:k1], batch_times,
@@ -381,7 +427,9 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
     pos = 0
     bi = 0
     while bi < n_batches:
-        if sizes[bi] == 1:
+        # realised pool admissions are sequential host state — the
+        # jitted singleton scan only models the believed scalar queue
+        if sizes[bi] == 1 and pools is None:
             nxt = np.searchsorted(nonsingle, bi)
             end = int(nonsingle[nxt]) if nxt < len(nonsingle) \
                 else n_batches
@@ -409,11 +457,15 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
         if n_b == 1:
             fin_row = np.maximum(avail, t) + etc[0]
             j = int(np.argmin(fin_row))
-            start = float(np.maximum(avail[j], t))
-            if min_min:
+            if pools is not None:
+                start, finish = pool_admit(int(members[0]), j, t,
+                                           float(etc[0, j]), s)
+            elif min_min:
+                start = float(np.maximum(avail[j], t))
                 finish = float(fin_row[j])
                 avail[j] = fin_row[j]
             else:                          # HEFT: start + float(etc)
+                start = float(np.maximum(avail[j], t))
                 finish = start + float(etc[0, j])
                 avail[j] = finish
             placed_rows.append((0, j, start, finish, float(etc[0, j])))
@@ -422,9 +474,13 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
             active = np.ones(n_b, bool)
             for _ in range(n_b):
                 i, j = sch.masked_argmin(fin, active)
-                start = float(np.maximum(avail[j], t))
-                finish = float(fin[i, j])
-                avail[j] = fin[i, j]
+                if pools is not None:
+                    start, finish = pool_admit(int(members[i]), j, t,
+                                               float(etc[i, j]), s)
+                else:
+                    start = float(np.maximum(avail[j], t))
+                    finish = float(fin[i, j])
+                    avail[j] = fin[i, j]
                 active[i] = False
                 fin[:, j] = np.maximum(avail[j], t) + etc[:, j]
                 placed_rows.append((i, j, start, finish,
@@ -434,9 +490,13 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
             for i in rank:
                 i = int(i)
                 j = int(np.argmin(np.maximum(avail, t) + etc[i]))
-                start = float(np.maximum(avail[j], t))
-                finish = start + float(etc[i, j])
-                avail[j] = finish
+                if pools is not None:
+                    start, finish = pool_admit(int(members[i]), j, t,
+                                               float(etc[i, j]), s)
+                else:
+                    start = float(np.maximum(avail[j], t))
+                    finish = start + float(etc[i, j])
+                    avail[j] = finish
                 placed_rows.append((i, j, start, finish,
                                     float(etc[i, j])))
         # map placements back to task indices FIFO per task object (the
@@ -458,25 +518,29 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
     if min_min and n_tasks:
         telemetry.count("column_refreshes", n_tasks)
 
-    # -- realised finishes (the ground-truth seam runs per task; the
-    # spec it sees carries the placement slab's effective bandwidth)
-    if service_time_fn is None:
-        fin_real = p_fin
+    # -- heavy-tailed network delay: one vectorized draw in placement
+    # order (numpy Generators consume the bit stream identically for
+    # sample(n) and n sequential sample(1) calls, and the RTT stream is
+    # independent of the service stream, so this reproduces the host
+    # engine's per-task draws exactly)
+    rtt_draws = np.asarray(rtt.sample(n_tasks), np.float64) \
+        if rtt is not None and n_tasks else None
+
+    # -- realised finishes (with pools the realised service was already
+    # consumed at admission, so the believed finish IS realised; else
+    # the ground-truth seam runs per task against the placement slab's
+    # effective-bandwidth spec)
+    if pools is not None or service_time_fn is None:
+        fin_real = p_fin if rtt_draws is None else p_fin + rtt_draws
     else:
         fin_real = np.empty(n_tasks, np.float64)
-        spec_cache: dict[tuple, object] = {}
         for p in range(n_tasks):
-            j = int(p_j[p])
-            bw = float(eff_rows[int(p_seg[p]) if links is not None
-                                else 0, j])
-            spec = spec_cache.get((j, bw))
-            if spec is None:
-                spec = specs0[j] if bw == specs0[j].link_bw else \
-                    dataclasses.replace(specs0[j], link_bw=bw)
-                spec_cache[(j, bw)] = spec
             fin_real[p] = p_start[p] + float(service_time_fn(
-                tasks[int(p_rid[p])], spec, float(p_etc[p]),
-                float(p_start[p])))
+                tasks[int(p_rid[p])], spec_at(int(p_j[p]),
+                                              int(p_seg[p])),
+                float(p_etc[p]), float(p_start[p])))
+        if rtt_draws is not None:
+            fin_real = fin_real + rtt_draws
 
     # -- how many ticks actually pop: every tick < T* re-pushes its
     # successor (arrivals or live tasks remain), the first tick >= T*
@@ -619,5 +683,6 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
             split=None if split_by_rid is None
             else [split_by_rid[r] for r in rid_o],
             switches=None if switches_by_rid is None
-            else [switches_by_rid[r] for r in rid_o])
+            else [switches_by_rid[r] for r in rid_o],
+            transfer_s=None if rtt_draws is None else rtt_draws[ord_p])
     return telemetry

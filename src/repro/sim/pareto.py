@@ -218,6 +218,15 @@ class ParetoStreamScheduler:
                     self.telemetry.count("split_switches")
         return switched
 
+    def on_saturation(self, link_bw: float, now: float = 0.0) -> int:
+        """An edge pool's utilisation just crossed the saturation
+        threshold from below: re-pick every live task's split along its
+        current front (contention shifts the latency/energy trade-off,
+        so picks made under an idle edge may now be tail-hostile).
+        Counts ``split_saturation_repicks``; returns switches."""
+        self.telemetry.count("split_saturation_repicks")
+        return self.on_link(link_bw, now=now)
+
     def complete(self, rid: int, link_bw: float, *,
                  now: float = 0.0) -> dict:
         """Close a task's plan.  Returns its final pick, switch count,

@@ -88,7 +88,7 @@ class RandomWalkLink:
     sigma: float = 0.3           # log-space std per sqrt(second)
     min_bw: float = 1e4
     max_bw: float = 1e11
-    seed: int = 0
+    seed: "int | np.random.SeedSequence" = 0
 
     def __post_init__(self):
         if not self.min_bw <= self.base_bw <= self.max_bw:
@@ -166,7 +166,7 @@ class TwoStateLink:
     bad_bw: float
     mean_good_s: float = 5.0
     mean_bad_s: float = 1.0
-    seed: int = 0
+    seed: "int | np.random.SeedSequence" = 0
 
     def __post_init__(self):
         if self.mean_good_s <= 0 or self.mean_bad_s <= 0:
@@ -208,7 +208,7 @@ class DiurnalLink:
     period_s: float = 60.0
     noise_sigma: float = 0.0     # log-space noise std per step
     phase: float = 0.0
-    seed: int = 0
+    seed: "int | np.random.SeedSequence" = 0
 
     def __post_init__(self):
         if not 0.0 <= self.amplitude < 1.0:
@@ -331,7 +331,15 @@ class ClusterLinks:
 
     @classmethod
     def random_walk(cls, base_bws: Sequence[float], *, sigma: float = 0.3,
-                    seed: int = 0) -> "ClusterLinks":
+                    seed=0) -> "ClusterLinks":
+        """Per-node random-walk links.  ``seed`` may be an ``int``
+        (historical ``seed + j`` per-node streams, unchanged) or a
+        ``np.random.SeedSequence`` whose spawned children seed each
+        node independently."""
+        if isinstance(seed, np.random.SeedSequence):
+            kids = seed.spawn(len(list(base_bws)))
+            return cls([RandomWalkLink(float(bw), sigma=sigma, seed=kid)
+                        for kid, bw in zip(kids, base_bws)])
         return cls([RandomWalkLink(float(bw), sigma=sigma, seed=seed + j)
                     for j, bw in enumerate(base_bws)])
 

@@ -71,6 +71,7 @@ class StreamScheduler:
     def __init__(self, nodes: Sequence[sch.Node], *,
                  policy: str = "min_min", cost=None,
                  rebalance: bool = False,
+                 pools=None, service_time_fn=None,
                  telemetry: Optional[Telemetry] = None):
         if policy not in ("min_min", "heft"):
             raise ValueError(f"unknown policy {policy!r}; "
@@ -80,8 +81,23 @@ class StreamScheduler:
         self.rebalance = rebalance
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.nodes = [dataclasses.replace(n) for n in nodes]
-        self.avail = np.asarray([n.available_at for n in self.nodes],
-                                np.float64)
+        self.pools = pools
+        self.service_time_fn = service_time_fn
+        if pools is not None:
+            if rebalance:
+                raise ValueError(
+                    "rebalance=True is incompatible with pools= — "
+                    "migration bookkeeping assumes the believed scalar "
+                    "queue, not realised c-server busy state")
+            if len(pools) != len(self.nodes):
+                raise ValueError(f"pools carries {len(pools)} pools for "
+                                 f"{len(self.nodes)} nodes")
+            # the availability vector IS the pools' earliest-free cache:
+            # admissions update it in place through NodePools.admit
+            self.avail = pools.avail
+        else:
+            self.avail = np.asarray([n.available_at for n in self.nodes],
+                                    np.float64)
         self.assignments: list[sch.Assignment] = []
         self._node_of: dict[int, int] = {}       # id(assignment) -> node j
         self._etc_of: dict[int, float] = {}      # id(assignment) -> etc
@@ -121,6 +137,10 @@ class StreamScheduler:
         tasks = list(tasks)
         if not tasks:
             return []
+        # queue-aware cost models price the wait as of the admission
+        # instant (QueueAwareCost reads live pool state through set_now)
+        if self.cost is not None and hasattr(self.cost, "set_now"):
+            self.cost.set_now(now)
         etc = self.etc_rows(tasks)
         placed: list[sch.Assignment] = []
         self.telemetry.count("replans")
@@ -128,9 +148,13 @@ class StreamScheduler:
             order = np.argsort(-etc.mean(axis=1))
             for i in order:
                 j = int(np.argmin(np.maximum(self.avail, now) + etc[i]))
-                start = float(np.maximum(self.avail[j], now))
-                finish = start + float(etc[i, j])
-                self.avail[j] = finish
+                if self.pools is not None:
+                    start, finish = self._admit(tasks[int(i)], j, now,
+                                                float(etc[i, j]))
+                else:
+                    start = float(np.maximum(self.avail[j], now))
+                    finish = start + float(etc[i, j])
+                    self.avail[j] = finish
                 placed.append(self._commit(tasks[int(i)], j, start,
                                            finish, float(etc[i, j])))
             return placed
@@ -138,9 +162,13 @@ class StreamScheduler:
         active = np.ones(len(tasks), bool)
         for _ in range(len(tasks)):
             i, j = sch.masked_argmin(fin, active)
-            start = float(np.maximum(self.avail[j], now))
-            finish = float(fin[i, j])
-            self.avail[j] = fin[i, j]
+            if self.pools is not None:
+                start, finish = self._admit(tasks[i], j, now,
+                                            float(etc[i, j]))
+            else:
+                start = float(np.maximum(self.avail[j], now))
+                finish = float(fin[i, j])
+                self.avail[j] = fin[i, j]
             active[i] = False
             fin[:, j] = np.maximum(self.avail[j], now) + etc[:, j]
             self.column_refreshes += 1
@@ -148,6 +176,25 @@ class StreamScheduler:
             placed.append(self._commit(tasks[i], j, start, finish,
                                        float(etc[i, j])))
         return placed
+
+    def _admit(self, task: sch.Task, j: int, now: float,
+               etc_tj: float) -> tuple[float, float]:
+        """Route one placement through node ``j``'s server pool.
+
+        The realised service time is drawn *at admission* (the pool
+        tracks realised busy-until state, so queue statistics come out
+        exact); ``self.avail`` is the pools' earliest-free cache and is
+        updated in place by ``NodePools.admit``.  With ``capacity=1``
+        and no ``service_time_fn`` this is bit-for-bit the historical
+        scalar bookkeeping: ``start = max(avail[j], now)``,
+        ``avail[j] = start + etc``.
+        """
+        service = etc_tj
+        if self.service_time_fn is not None:
+            start_pred = max(self.pools.pools[j].next_free(), float(now))
+            service = float(self.service_time_fn(
+                task, self.nodes[j].spec, etc_tj, start_pred))
+        return self.pools.admit(j, now, service)
 
     def _commit(self, task: sch.Task, j: int, start: float, finish: float,
                 etc_tj: float) -> sch.Assignment:
@@ -236,6 +283,8 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                     split_layers: Optional[LayersFor] = None,
                     split_cost=None, split_backend: str = "numpy",
                     rebalance: bool = False,
+                    pools=None, rtt=None,
+                    saturation_threshold: Optional[float] = None,
                     telemetry: Optional[Telemetry] = None,
                     engine: str = "event") -> Telemetry:
     """Run the full event-driven streaming simulation.
@@ -291,6 +340,23 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
     planner is scored against, and the slab-batchable decision path the
     fleet engine drains in bulk.
 
+    ``pools=`` (a :class:`repro.sim.queueing.NodePools`) replaces the
+    believed scalar queue with finite-capacity c-server FIFO pools
+    tracking *realised* busy state: sojourn = queue wait + service
+    (+ transfer), recorded on each :class:`TaskRecord` and summarised
+    as ``p99_wait_s`` / ``mean_wait_s`` / ``mean_queue_len``.  With
+    pools the realised service time (``service_time_fn``) is drawn *at
+    admission* so queue statistics come out exact; ``capacity=1`` with
+    no service model is bit-for-bit the historical bookkeeping.
+    ``rtt=`` (a :class:`repro.sim.queueing.DelayProcess`, e.g.
+    :class:`~repro.sim.queueing.WeibullRTT`) samples one heavy-tailed
+    network round-trip per task, delaying its completion event and
+    booked as the record's ``transfer_s``.  ``saturation_threshold=``
+    (needs ``split_planner=`` and ``pools=``) fires
+    ``split_planner.on_saturation`` whenever any pool's utilisation
+    crosses the threshold from below — tail-aware re-picks exactly when
+    contention bites.
+
     ``engine="fleet"`` dispatches the whole run to
     :func:`repro.sim.fleet.simulate_fleet`, the time-slabbed array-native
     twin of this loop — bit-for-bit equal telemetry in f64, orders of
@@ -308,10 +374,17 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
             link_update_dt=link_update_dt, split_planner=split_planner,
             split_env=split_env, split_layers=split_layers,
             split_cost=split_cost, split_backend=split_backend,
-            rebalance=rebalance, telemetry=telemetry)
+            rebalance=rebalance, pools=pools, rtt=rtt,
+            saturation_threshold=saturation_threshold,
+            telemetry=telemetry)
     if engine != "event":
         raise ValueError(f"unknown engine {engine!r}; "
                          "use 'event' or 'fleet'")
+    if saturation_threshold is not None and (
+            split_planner is None or pools is None):
+        raise ValueError("saturation_threshold= needs split_planner= "
+                         "and pools= (it re-picks splits when pool "
+                         "utilisation crosses the threshold)")
     telemetry = telemetry if telemetry is not None else Telemetry()
     if oracle is not None:
         if cost is not None:
@@ -343,7 +416,9 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
         return split_layers
 
     sched = StreamScheduler(nodes, policy=policy, cost=cost,
-                            rebalance=rebalance, telemetry=telemetry)
+                            rebalance=rebalance, pools=pools,
+                            service_time_fn=service_time_fn,
+                            telemetry=telemetry)
     arrivals = np.asarray(arrivals, np.float64)
     if arrivals.shape != (len(tasks),):
         raise ValueError(
@@ -364,18 +439,27 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
     completed: set[int] = set()                  # id(assignment)
     spec_at_place: dict[int, object] = {}        # id(a) -> spec at placement
     real_finish: dict[int, float] = {}           # id(a) -> realised finish
+    rtt_of: dict[int, float] = {}                # id(a) -> sampled RTT
+    sat_was = False                              # saturation edge detector
 
     def schedule_finish(a: sch.Assignment) -> None:
         """Queue the completion event: at the believed finish, or at
         ``start + actual`` when a ground-truth model rides along (the
-        scheduler's queue bookkeeping stays belief-driven)."""
+        scheduler's queue bookkeeping stays belief-driven).  With pools
+        the realised service was already drawn at admission, so
+        ``a.finish`` *is* the realised compute finish; a heavy-tailed
+        ``rtt`` sample then delays the completion event further."""
         j = sched.node_index(a)
         spec_at_place[id(a)] = sched.nodes[j].spec
         t = a.finish
-        if service_time_fn is not None:
+        if pools is None and service_time_fn is not None:
             t = a.start + float(service_time_fn(a.task,
                                                 sched.nodes[j].spec,
                                                 sched.etc_of(a), a.start))
+        if rtt is not None:
+            r = float(rtt.sample(1)[0])
+            rtt_of[id(a)] = r
+            t += r
         real_finish[id(a)] = t
         q.push(t, "finish", a)
 
@@ -409,6 +493,12 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                         split_cost, split_backend)
                     split_of[rid] = int(plan.splits[0])
                     telemetry.count("split_decides")
+            if saturation_threshold is not None:
+                sat_now = bool(pools.saturated(
+                    now, saturation_threshold).any()) if now > 0 else False
+                if sat_now and not sat_was:
+                    split_planner.on_saturation(split_env.link_bw, now=now)
+                sat_was = sat_now
         elif ev.kind == "finish":
             a = ev.payload
             if id(a) in completed or real_finish[id(a)] != now:
@@ -423,7 +513,8 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                 # with what the prediction actually saw.
                 oracle.observe_task(a.task, spec_at_place[id(a)],
                                     realised_s=now - a.start,
-                                    predicted_s=sched.etc_of(a), now=now)
+                                    predicted_s=sched.etc_of(a), now=now,
+                                    extra_transfer_s=rtt_of.get(id(a), 0.0))
             split, switches = None, 0
             if split_planner is not None:
                 rec = split_planner.complete(rid, split_env.link_bw,
@@ -437,7 +528,8 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                 node_id=j, deadline_s=a.task.deadline_s,
                 energy_j=(now - a.start)
                 * sched.nodes[j].spec.tdp_watts,
-                split=split, switches=switches))
+                split=split, switches=switches,
+                transfer_s=rtt_of.get(id(a), 0.0)))
             del live[rid]
             migrated = sched.on_node_free(j, now)
             if migrated is not None:

@@ -37,11 +37,22 @@ class TaskRecord:
     energy_j: float = 0.0
     split: Optional[int] = None      # final offload split, if planned
     switches: int = 0                # Pareto re-picks that changed it
+    transfer_s: float = 0.0          # network delay (sampled RTT)
 
     @property
     def sojourn_s(self) -> float:
-        """Arrival → completion (queueing + service)."""
+        """Arrival → completion (queueing + service + transfer)."""
         return self.finished_s - self.arrived_s
+
+    @property
+    def wait_s(self) -> float:
+        """Queueing delay: arrival → start of service."""
+        return self.started_s - self.arrived_s
+
+    @property
+    def service_s(self) -> float:
+        """Time in service (start → finish, net of network delay)."""
+        return self.finished_s - self.started_s - self.transfer_s
 
     @property
     def missed(self) -> bool:
@@ -82,7 +93,8 @@ class Telemetry:
 
     def complete_arrays(self, names, arrived_s, started_s, finished_s, *,
                         node, node_id, deadline_s, energy_j,
-                        split=None, switches=None) -> None:
+                        split=None, switches=None,
+                        transfer_s=None) -> None:
         """Ingest one batch of completed tasks as parallel columns (all
         length n; ``deadline_s``/``split`` entries may be ``None``,
         ``split``/``switches`` may be ``None`` wholesale).  Equivalent
@@ -99,12 +111,12 @@ class Telemetry:
                                  f"expected {n}")
         self._pending.append((list(names), arrived_s, started_s,
                               finished_s, node, node_id, deadline_s,
-                              energy_j, split, switches))
+                              energy_j, split, switches, transfer_s))
 
     def _materialise(self) -> None:
         recs = self._records
         for (names, arrived, started, finished, node, node_id, deadline,
-             energy, split, switches) in self._pending:
+             energy, split, switches, transfer) in self._pending:
             for k in range(len(names)):
                 recs.append(TaskRecord(
                     name=names[k], arrived_s=float(arrived[k]),
@@ -114,7 +126,9 @@ class Telemetry:
                     deadline_s=deadline[k], energy_j=float(energy[k]),
                     split=None if split is None else split[k],
                     switches=0 if switches is None
-                    else int(switches[k])))
+                    else int(switches[k]),
+                    transfer_s=0.0 if transfer is None
+                    else float(transfer[k])))
         self._pending.clear()
 
     @property
@@ -139,6 +153,38 @@ class Telemetry:
     def energy_j(self) -> float:
         return float(sum(r.energy_j for r in self.records))
 
+    def cvar(self, alpha: float = 0.95) -> float:
+        """CVaR_alpha of task sojourn times: the mean sojourn over the
+        worst ``(1 - alpha)`` fraction of tasks — the tail statistic
+        the tail-aware cost objective optimises for."""
+        if not 0.0 < alpha < 1.0:
+            raise ValueError(f"alpha must be in (0, 1), got {alpha}")
+        soj = np.asarray([r.sojourn_s for r in self.records], np.float64)
+        if soj.size == 0:
+            return 0.0
+        var = np.percentile(soj, 100.0 * alpha)
+        tail = soj[soj >= var]
+        return float(tail.mean()) if tail.size else float(var)
+
+    def queue_lens(self) -> dict[str, float]:
+        """Per-node time-averaged queue length over the makespan
+        (Little's law: total queueing delay accrued on the node divided
+        by the run's span).  Node labels match :meth:`utilisation`."""
+        span = self.makespan_s
+        waits: Counter = Counter()
+        for r in self.records:
+            if r.node:
+                waits[(r.node_id, r.node)] += r.wait_s
+        names = Counter(name for _, name in waits)
+        out = {}
+        for nid, name in sorted(waits, key=lambda k: (str(k[1]),
+                                                      -1 if k[0] is None
+                                                      else k[0])):
+            label = name if names[name] == 1 or nid is None \
+                else f"{name}@{nid}"
+            out[label] = waits[(nid, name)] / span if span > 0 else 0.0
+        return out
+
     def utilisation(self) -> dict[str, float]:
         """Busy fraction per node over the run's makespan.
 
@@ -162,7 +208,9 @@ class Telemetry:
     def summary(self) -> dict:
         """Run-level metrics (the numbers a paper table would report)."""
         soj = np.asarray([r.sojourn_s for r in self.records], np.float64)
+        waits = np.asarray([r.wait_s for r in self.records], np.float64)
         util = self.utilisation()
+        span = self.makespan_s
         out = {
             "n_tasks": len(self.records),
             "p50_completion_s": float(np.percentile(soj, 50))
@@ -176,6 +224,13 @@ class Telemetry:
             "mean_utilisation": float(np.mean(list(util.values())))
             if util else 0.0,
             "split_switches": int(sum(r.switches for r in self.records)),
+            # queueing breakdown (all 0.0 without finite-capacity pools)
+            "p99_wait_s": float(np.percentile(waits, 99))
+            if waits.size else 0.0,
+            "mean_wait_s": float(waits.mean()) if waits.size else 0.0,
+            # fleet-wide time-averaged queue length (Little's law)
+            "mean_queue_len": float(waits.sum()) / span
+            if span > 0 else 0.0,
         }
         # counters and gauges ride along under their own names;
         # record-derived metrics win on collision (e.g.
@@ -194,7 +249,9 @@ class Telemetry:
         node's utilisation — the same ``[{"name": ..., ...}]`` shape as
         the ``results/bench_*.json`` files."""
         rows = [{"name": name, **self.summary()}]
-        rows += [{"name": f"{name}_util_{node}", "utilisation": u}
+        qlen = self.queue_lens()
+        rows += [{"name": f"{name}_util_{node}", "utilisation": u,
+                  "mean_queue_len": qlen.get(node, 0.0)}
                  for node, u in self.utilisation().items()]
         return rows
 
