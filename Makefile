@@ -1,0 +1,21 @@
+# Developer entry points.  The linter (`make lint`) is pure stdlib; the
+# test lanes need jax + numpy + requirements-dev.txt (pytest, hypothesis).
+PYTHONPATH := src
+
+.PHONY: lint lint-json fast test bench-table
+
+lint:          ## invariant linter over the whole tree (CI `analysis` job)
+	PYTHONPATH=$(PYTHONPATH) python -m repro.analysis src tests benchmarks examples
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/report.py --check
+
+lint-json:     ## machine-readable findings (CI annotation / tooling)
+	PYTHONPATH=$(PYTHONPATH) python -m repro.analysis --format json src tests benchmarks examples
+
+fast:          ## fast test lane: slow-marked tests excluded
+	HYPOTHESIS_PROFILE=fast PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m "not slow"
+
+test:          ## tier-1: the full suite (release gate)
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+bench-table:   ## regenerate the README perf-trajectory table
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/report.py --readme

@@ -10,10 +10,14 @@ GitHub-flavoured markdown table.
 
 Run:            PYTHONPATH=src python benchmarks/report.py
 Update README:  PYTHONPATH=src python benchmarks/report.py --readme
+CI gate:        PYTHONPATH=src python benchmarks/report.py --check
 
 ``--readme`` rewrites the block between the ``BENCH_TABLE`` markers in
 ``README.md`` in place, so the committed table never drifts from the
-committed baselines.
+committed baselines; ``--check`` exits non-zero when the committed
+README block differs from what the baselines would render (the CI
+fast lane runs it, so a landed ``BENCH_*.json`` without the matching
+``--readme`` regeneration fails the build).
 """
 from __future__ import annotations
 
@@ -102,27 +106,48 @@ def table(entries: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def _readme_block(text: str) -> str:
+    if START not in text or END not in text:
+        raise SystemExit(f"README.md is missing the {START} markers")
+    return text.split(START, 1)[1].split(END, 1)[0].strip()
+
+
 def update_readme(tbl: str) -> None:
     with open(README) as f:
         text = f.read()
-    if START not in text or END not in text:
-        raise SystemExit(f"README.md is missing the {START} markers")
+    _readme_block(text)                 # validate markers
     head, rest = text.split(START, 1)
     _, tail = rest.split(END, 1)
     with open(README, "w") as f:
         f.write(f"{head}{START}\n{tbl}\n{END}{tail}")
 
 
+def check_readme(tbl: str) -> bool:
+    """True when the committed README table matches the baselines."""
+    with open(README) as f:
+        return _readme_block(f.read()) == tbl.strip()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--readme", action="store_true",
                     help="rewrite the README table block in place")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if the README table is stale "
+                         "w.r.t. the committed BENCH_*.json baselines")
     args = ap.parse_args()
     tbl = table(collect())
     print(tbl)
     if args.readme:
         update_readme(tbl)
         print(f"\n[report] README.md table updated ({README})")
+    if args.check:
+        if not check_readme(tbl):
+            raise SystemExit(
+                "[report] README.md perf table is STALE — run "
+                "`PYTHONPATH=src python benchmarks/report.py --readme` "
+                "and commit the result")
+        print("\n[report] README.md table is up to date")
 
 
 if __name__ == "__main__":

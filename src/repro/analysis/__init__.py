@@ -1,0 +1,31 @@
+"""repro.analysis — AST-based invariant linter for the repro codebase.
+
+Machine-checks the conventions the reproducibility guarantees rest on:
+seeded-RNG-stream hygiene (RNG001/RNG002), FMA-contraction and
+wall-clock determinism contracts (DET001/DET002), jax.jit trace hazards
+(JIT001/JIT002), kernel-triple signature/SPEC-layout alignment
+(KRN001), and unit-suffix arithmetic (UNIT001).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis [--format json] \\
+        [--select RNG001,KRN001] [--fail-level warning] src tests
+
+Library::
+
+    from repro.analysis import analyze_source, run_paths
+    findings = run_paths(["src"])          # [] == invariants hold
+
+See ``docs/analysis-rules.md`` for the full rule catalog with examples
+and suppression syntax (``# repro: disable=RULE`` per line,
+``# repro: disable-file=RULE`` per file, ``# repro:
+module-tags=fma-sensitive`` to opt a module into tagged rules).
+"""
+import repro.analysis.rules  # noqa: F401  (registers the shipped rules)
+from repro.analysis.core import (REGISTRY, FileContext, Finding, Rule,
+                                 Severity, register)
+from repro.analysis.runner import (analyze_source, analyze_sources,
+                                   run_paths)
+
+__all__ = ["REGISTRY", "FileContext", "Finding", "Rule", "Severity",
+           "register", "analyze_source", "analyze_sources", "run_paths"]

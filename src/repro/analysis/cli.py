@@ -1,0 +1,64 @@
+"""Command-line entry: ``python -m repro.analysis [options] paths...``
+
+Exit status: 0 when no finding reaches ``--fail-level`` (default:
+warning), 1 when at least one does, 2 on usage errors.  ``--format
+json`` emits a machine-readable report for CI annotation.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+import repro.analysis.rules  # noqa: F401  (registers the rule set)
+from repro.analysis.core import Severity
+from repro.analysis.reporters import json_report, rule_catalog, text_report
+from repro.analysis.runner import iter_py_files, run_paths
+
+
+def _csv(value: str) -> List[str]:
+    return [v for v in value.replace(",", " ").split() if v]
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST-based invariant linter for the repro codebase: "
+                    "determinism, bit-for-bit, RNG-stream, jit-trace and "
+                    "kernel-layout contracts.")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", type=_csv, default=None, metavar="IDS",
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--ignore", type=_csv, default=None, metavar="IDS",
+                    help="comma-separated rule ids to skip")
+    ap.add_argument("--fail-level", default="warning",
+                    choices=("info", "warning", "error"),
+                    help="lowest severity that makes the exit status "
+                         "non-zero (default: warning)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(rule_catalog())
+        return 0
+
+    paths = args.paths or ["src"]
+    try:
+        findings = run_paths(paths, select=args.select, ignore=args.ignore)
+        n_files = len(iter_py_files(paths))
+    except (FileNotFoundError, ValueError) as err:
+        print(f"error: {err}", file=sys.stderr)
+        return 2
+
+    report = (json_report if args.format == "json" else text_report)(
+        findings, n_files)
+    print(report)
+    fail_at = Severity.parse(args.fail_level)
+    return 1 if any(f.severity >= fail_at for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,284 @@
+"""Framework core for the repro invariant linter.
+
+The repo's reproducibility guarantees — bit-for-bit event ≡ fleet,
+numpy ≡ jax in f64, seeded-stream pinning — rest on conventions that no
+type checker or test can see directly: *how* code is written (sequential
+accumulation, not ``@``), *where* RNGs come from (spawned streams, not
+fresh literals), *which* clock a module is allowed to read.  This module
+turns those conventions into machine-checked contracts: an AST-based
+analysis pass with a rule registry, severity levels, and per-line /
+per-file suppressions, built on nothing but ``ast`` + ``tokenize``.
+
+Vocabulary
+----------
+
+* A :class:`Rule` inspects one :class:`FileContext` (``scope="file"``) or
+  the whole set of parsed files at once (``scope="project"``, for
+  cross-file contracts like kernel-triple signature alignment) and yields
+  :class:`Finding` objects.
+* Rules self-register via the :func:`register` decorator; the registry
+  maps rule id → singleton instance.  ``--select`` / ``--ignore`` on the
+  CLI filter by id.
+* Suppressions and module tags are comment directives, recognised only
+  in real comment tokens (``tokenize``-derived, so a ``# repro:`` inside
+  a string literal never triggers)::
+
+      x = legacy_call()   # repro: disable=RNG001      (this line only)
+      # repro: disable-file=DET002                     (whole file)
+      # repro: module-tags=fma-sensitive               (tag the module)
+
+  ``# repro: disable=all`` suppresses every rule on the line.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import enum
+import io
+import os
+import re
+import tokenize
+from typing import Dict, FrozenSet, Iterable, Iterator, List, Optional, Set
+
+
+class Severity(enum.IntEnum):
+    """Ordered severity levels; the CLI fails on findings >= fail-level."""
+
+    INFO = 10
+    WARNING = 20
+    ERROR = 30
+
+    @classmethod
+    def parse(cls, name: str) -> "Severity":
+        try:
+            return cls[name.upper()]
+        except KeyError:
+            raise ValueError(
+                f"unknown severity {name!r}; "
+                f"expected one of {[s.name.lower() for s in cls]}") from None
+
+    def __str__(self) -> str:          # 'error', not 'Severity.ERROR'
+        return self.name.lower()
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    path: str
+    line: int
+    col: int
+    rule: str
+    severity: Severity
+    message: str
+
+    def to_dict(self) -> dict:
+        return {"path": self.path, "line": self.line, "col": self.col,
+                "rule": self.rule, "severity": str(self.severity),
+                "message": self.message}
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule} [{self.severity}] {self.message}")
+
+
+# --------------------------------------------------------------------------
+# Comment directives: suppressions and module tags
+# --------------------------------------------------------------------------
+_DIRECTIVE = re.compile(
+    r"#\s*repro:\s*(disable-file|disable|module-tags)\s*=\s*"
+    r"([A-Za-z0-9_-]+(?:\s*[,\s]\s*[A-Za-z0-9_-]+)*)")
+
+
+@dataclasses.dataclass
+class Directives:
+    """Parsed ``# repro:`` comment directives for one file."""
+
+    line_disables: Dict[int, Set[str]] = dataclasses.field(
+        default_factory=dict)
+    file_disables: Set[str] = dataclasses.field(default_factory=set)
+    tags: FrozenSet[str] = frozenset()
+
+    def suppresses(self, rule_id: str, line: int) -> bool:
+        if rule_id in self.file_disables or "all" in self.file_disables:
+            return True
+        on_line = self.line_disables.get(line, ())
+        return rule_id in on_line or "all" in on_line
+
+
+def parse_directives(source: str) -> Directives:
+    """Extract directives from comment tokens (strings never match)."""
+    out = Directives()
+    tags: Set[str] = set()
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        comments = [(tok.start[0], tok.string) for tok in tokens
+                    if tok.type == tokenize.COMMENT]
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        return out                      # unparseable: ast will report it
+    for line, text in comments:
+        m = _DIRECTIVE.search(text)
+        if not m:
+            continue
+        kind = m.group(1)
+        names = {n for n in re.split(r"[,\s]+", m.group(2)) if n}
+        if kind == "disable":
+            out.line_disables.setdefault(line, set()).update(names)
+        elif kind == "disable-file":
+            out.file_disables.update(names)
+        else:                           # module-tags
+            tags.update(names)
+    out.tags = frozenset(tags)
+    return out
+
+
+# --------------------------------------------------------------------------
+# File context
+# --------------------------------------------------------------------------
+def module_name(path: str) -> str:
+    """Dotted module name for paths under a ``repro`` package root.
+
+    ``src/repro/sim/events.py`` → ``repro.sim.events``; files outside a
+    ``repro`` tree (tests, benchmarks) get an empty module name, which
+    makes every module-scoped rule a no-op there.
+    """
+    parts = os.path.normpath(path).split(os.sep)
+    if "repro" not in parts:
+        return ""
+    parts = parts[parts.index("repro"):]
+    if parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+@dataclasses.dataclass
+class FileContext:
+    """One parsed source file plus its directives, handed to every rule."""
+
+    path: str
+    module: str
+    source: str
+    tree: ast.Module
+    directives: Directives
+
+    @property
+    def tags(self) -> FrozenSet[str]:
+        return self.directives.tags
+
+    def in_module(self, *prefixes: str) -> bool:
+        """True when the file's dotted module sits under any prefix."""
+        return any(self.module == p or self.module.startswith(p + ".")
+                   for p in prefixes)
+
+
+def build_context(path: str, source: Optional[str] = None,
+                  module: Optional[str] = None) -> FileContext:
+    """Parse one file into a :class:`FileContext`.
+
+    Raises ``SyntaxError`` if the source does not parse; the runner
+    converts that into a ``SYNTAX`` finding rather than crashing.
+    """
+    if source is None:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+    tree = ast.parse(source, filename=path)
+    return FileContext(path=path,
+                       module=module_name(path) if module is None else module,
+                       source=source, tree=tree,
+                       directives=parse_directives(source))
+
+
+# --------------------------------------------------------------------------
+# Rules and the registry
+# --------------------------------------------------------------------------
+class Rule:
+    """Base class: subclass, set the class attrs, implement ``check``.
+
+    ``scope="file"`` rules get one :class:`FileContext` per call;
+    ``scope="project"`` rules get the whole list at once (after every
+    file parsed) for cross-file contracts.
+    """
+
+    id: str = ""
+    severity: Severity = Severity.WARNING
+    title: str = ""
+    scope: str = "file"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        return iter(())
+
+    def check_project(self,
+                      ctxs: List[FileContext]) -> Iterator[Finding]:
+        return iter(())
+
+    def finding(self, ctx: FileContext, node: ast.AST,
+                message: str) -> Finding:
+        return Finding(path=ctx.path,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0),
+                       rule=self.id, severity=self.severity,
+                       message=message)
+
+
+REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and add to the global registry."""
+    inst = cls()
+    if not inst.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if inst.id in REGISTRY:
+        raise ValueError(f"duplicate rule id {inst.id}")
+    REGISTRY[inst.id] = inst
+    return cls
+
+
+def selected_rules(select: Optional[Iterable[str]] = None,
+                   ignore: Optional[Iterable[str]] = None) -> List[Rule]:
+    """Registry filtered by ``--select`` / ``--ignore`` id lists."""
+    ids = sorted(REGISTRY)
+    if select:
+        want = set(select)
+        unknown = want - set(ids)
+        if unknown:
+            raise ValueError(f"unknown rule id(s): {sorted(unknown)}; "
+                             f"known: {ids}")
+        ids = [i for i in ids if i in want]
+    if ignore:
+        ids = [i for i in ids if i not in set(ignore)]
+    return [REGISTRY[i] for i in ids]
+
+
+# --------------------------------------------------------------------------
+# Shared AST helpers
+# --------------------------------------------------------------------------
+def dotted(node: ast.AST) -> Optional[str]:
+    """Dotted name of a Name/Attribute chain (``np.random.seed``)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted(node.func)
+
+
+def walk_skipping_functions(node: ast.AST) -> Iterator[ast.AST]:
+    """Like ``ast.walk`` over a function body, but does not descend into
+    nested function/lambda scopes (their parameters shadow)."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        child = stack.pop()
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            continue
+        yield child
+        stack.extend(ast.iter_child_nodes(child))

@@ -1,0 +1,33 @@
+"""Render findings as human text or machine JSON (``--format``)."""
+from __future__ import annotations
+
+import json
+from typing import List
+
+from repro.analysis.core import REGISTRY, Finding
+from repro.analysis.runner import severity_counts
+
+
+def text_report(findings: List[Finding], n_files: int) -> str:
+    lines = [f.render() for f in findings]
+    c = severity_counts(findings)
+    lines.append(
+        f"{len(findings)} finding(s) ({c['error']} error, "
+        f"{c['warning']} warning, {c['info']} info) in {n_files} file(s)")
+    return "\n".join(lines)
+
+
+def json_report(findings: List[Finding], n_files: int) -> str:
+    return json.dumps({
+        "findings": [f.to_dict() for f in findings],
+        "counts": severity_counts(findings),
+        "n_files": n_files,
+    }, indent=2)
+
+
+def rule_catalog() -> str:
+    """``--list-rules``: one line per registered rule."""
+    width = max((len(i) for i in REGISTRY), default=0)
+    return "\n".join(
+        f"{rid:<{width}}  [{REGISTRY[rid].severity}] {REGISTRY[rid].title}"
+        for rid in sorted(REGISTRY))

@@ -1,0 +1,4 @@
+"""Rule modules self-register on import; importing this package loads
+the full shipped rule set into :data:`repro.analysis.core.REGISTRY`."""
+from repro.analysis.rules import (determinism, jit, kernels, rng,  # noqa: F401
+                                  units)

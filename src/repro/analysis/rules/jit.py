@@ -1,0 +1,225 @@
+"""jax.jit trace-hazard rules.
+
+JIT001 — a ``@jax.jit`` function that reads a *mutable* module global
+(a dict/list/set literal, or a global rebound after definition) bakes
+the trace-time value into the compiled executable: later mutations are
+silently ignored (or worse, trigger retraces keyed on identity).  The
+same goes for mutating ``self``/object attributes inside the traced
+body — the write happens once, at trace time.  Reading immutable
+module constants (``np.array(...)`` tables, ints) is fine and common.
+
+JIT002 — Python ``if``/``while`` on a *traced* argument raises
+``TracerBoolConversionError`` at best and silently specialises at
+worst; branch on traced values with ``jnp.where`` / ``lax.cond``, or
+mark the argument static (``static_argnames``), which the rule
+understands and exempts.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.core import (FileContext, Finding, Rule, Severity,
+                                 dotted, register, walk_skipping_functions)
+
+_MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp)
+
+
+def _jit_decorator(dec: ast.AST) -> Optional[Tuple[Set[str], Set[int]]]:
+    """If ``dec`` is a jit decorator, return (static names, static nums).
+
+    Recognises ``@jax.jit``, ``@jit``, ``@jax.jit(...)`` and
+    ``@functools.partial(jax.jit, static_argnames=(...), ...)`` forms.
+    """
+    jit_names = {"jax.jit", "jit"}
+    if dotted(dec) in jit_names:
+        return set(), set()
+    if not isinstance(dec, ast.Call):
+        return None
+    callee = dotted(dec.func)
+    kwargs = dec.keywords
+    if callee in jit_names:
+        pass                                   # @jax.jit(static_argnames=...)
+    elif callee in ("functools.partial", "partial") and dec.args \
+            and dotted(dec.args[0]) in jit_names:
+        pass                                   # @partial(jax.jit, ...)
+    else:
+        return None
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    for kw in kwargs:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    nums.add(n.value)
+    return names, nums
+
+
+def _param_names(fn: ast.FunctionDef) -> List[str]:
+    a = fn.args
+    return ([p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+            + [p.arg for p in a.kwonlyargs])
+
+
+def _jitted_functions(tree: ast.Module):
+    """Yield (FunctionDef, traced-param set) for every jit-decorated def."""
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            spec = _jit_decorator(dec)
+            if spec is None:
+                continue
+            static_names, static_nums = spec
+            params = _param_names(node)
+            positional = ([p.arg for p in node.args.posonlyargs]
+                          + [p.arg for p in node.args.args])
+            for i in static_nums:
+                if 0 <= i < len(positional):
+                    static_names.add(positional[i])
+            traced = [p for p in params
+                      if p not in static_names and p != "self"]
+            yield node, set(traced)
+            break
+
+
+def _mutable_globals(tree: ast.Module) -> Set[str]:
+    """Module-level names it is hazardous for a jitted fn to close over:
+    bound to a mutable literal, rebound 2+ times, or `global`-assigned."""
+    bind_counts: dict = {}
+    mutable: Set[str] = set()
+
+    def note(target: ast.AST, value: Optional[ast.AST]):
+        if isinstance(target, ast.Name):
+            bind_counts[target.id] = bind_counts.get(target.id, 0) + 1
+            if value is not None and isinstance(value, _MUTABLE_LITERALS):
+                mutable.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                note(elt, None)
+
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                note(t, stmt.value)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            note(stmt.target, stmt.value)
+        elif isinstance(stmt, ast.AugAssign):
+            note(stmt.target, None)
+            if isinstance(stmt.target, ast.Name):
+                mutable.add(stmt.target.id)    # rebinding in place
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Global):
+            mutable.update(node.names)
+    mutable.update(n for n, c in bind_counts.items() if c > 1)
+    return mutable
+
+
+def _local_names(fn: ast.FunctionDef) -> Set[str]:
+    """Names bound inside the function body (params included)."""
+    names = set(_param_names(fn))
+    if fn.args.vararg:
+        names.add(fn.args.vararg.arg)
+    if fn.args.kwarg:
+        names.add(fn.args.kwarg.arg)
+    for node in walk_skipping_functions(fn):
+        if isinstance(node, ast.Name) and isinstance(
+                node.ctx, (ast.Store, ast.Del)):
+            names.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                names.add((alias.asname or alias.name).split(".")[0])
+    # nested defs are skipped by the walker above but still bind a name
+    for node in ast.iter_child_nodes(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(node.name)
+    return names
+
+
+@register
+class JitMutableClosure(Rule):
+    """JIT001: jitted functions must not close over mutable state."""
+
+    id = "JIT001"
+    severity = Severity.WARNING
+    title = ("@jax.jit functions must not read mutable module globals "
+             "or mutate object attributes — trace-time values are "
+             "baked into the executable")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        hazards = _mutable_globals(ctx.tree)
+        for fn, _traced in _jitted_functions(ctx.tree):
+            local = _local_names(fn)
+            for node in walk_skipping_functions(fn):
+                if isinstance(node, ast.Name) and isinstance(
+                        node.ctx, ast.Load) \
+                        and node.id in hazards and node.id not in local:
+                    yield self.finding(
+                        ctx, node,
+                        f"jitted `{fn.name}` reads mutable module "
+                        f"global `{node.id}`: its trace-time value is "
+                        f"frozen into the compiled fn — pass it as an "
+                        f"argument instead")
+                elif isinstance(node, ast.Attribute) and isinstance(
+                        node.ctx, (ast.Store, ast.Del)):
+                    yield self.finding(
+                        ctx, node,
+                        f"jitted `{fn.name}` assigns attribute "
+                        f"`{ast.unparse(node)}`: the write happens once "
+                        f"at trace time, not per call — return the "
+                        f"value instead")
+                elif isinstance(node, ast.Global):
+                    yield self.finding(
+                        ctx, node,
+                        f"jitted `{fn.name}` declares `global "
+                        f"{', '.join(node.names)}`: side effects under "
+                        f"trace run once, at trace time")
+
+
+@register
+class JitPythonBranchOnTracer(Rule):
+    """JIT002: no Python if/while on traced arguments."""
+
+    id = "JIT002"
+    severity = Severity.WARNING
+    title = ("Python if/while on a traced @jax.jit argument — use "
+             "jnp.where / lax.cond, or mark the argument static")
+
+    @staticmethod
+    def _names_outside_is_compares(test: ast.AST) -> Set[str]:
+        """Names used in ``test``, minus those only inside ``is [not]
+        None``-style identity compares (concrete under trace)."""
+        under_is: Set[int] = set()
+        for node in ast.walk(test):
+            if isinstance(node, ast.Compare) and all(
+                    isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                for sub in ast.walk(node):
+                    under_is.add(id(sub))
+        return {n.id for n in ast.walk(test)
+                if isinstance(n, ast.Name) and id(n) not in under_is}
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn, traced in _jitted_functions(ctx.tree):
+            if not traced:
+                continue
+            for node in walk_skipping_functions(fn):
+                if not isinstance(node, (ast.If, ast.While)):
+                    continue
+                used = sorted(
+                    self._names_outside_is_compares(node.test) & traced)
+                if used:
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield self.finding(
+                        ctx, node,
+                        f"`{kind}` on traced argument(s) "
+                        f"{', '.join(used)} of jitted `{fn.name}`: "
+                        f"Python control flow cannot branch on tracers "
+                        f"— use jnp.where/lax.cond or static_argnames")

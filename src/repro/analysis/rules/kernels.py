@@ -1,0 +1,193 @@
+"""Kernel-triple contracts: signature alignment and SPEC row layout.
+
+Every accelerator kernel lives as a ``kernels/<name>/`` triple —
+``ref.py`` (host-numpy oracle), ``ops.py`` (jitted/dispatch entry),
+``kernel.py`` (the Pallas body).  Two contracts have historically been
+maintained by hand and broken by hand:
+
+* the host oracle ``<fn>_ref`` and its accelerated counterpart ``<fn>``
+  must agree on the leading parameters (ops may append tuning knobs like
+  ``block_e`` / ``interpret``), or equivalence tests silently compare
+  different computations;
+* the SMEM spec-vector layout — ``SPEC_*`` row-index constants packed by
+  ``pack_spec`` and read by the kernel — must exactly tile
+  ``0..SPEC_LEN-1``.  The decide_split spec has been re-laid twice
+  (9 → 12); a constant added without bumping ``SPEC_LEN`` (or vice
+  versa) ships a kernel that silently reads garbage rows.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.core import (FileContext, Finding, Rule, Severity,
+                                 register)
+
+_KERNEL_DIR = re.compile(r"kernels[/\\]([A-Za-z0-9_]+)[/\\]"
+                         r"(ref|ops|kernel)\.py$")
+
+
+def _public_defs(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {node.name: node for node in tree.body
+            if isinstance(node, ast.FunctionDef)
+            and not node.name.startswith("_")}
+
+
+def _sig_names(fn: ast.FunctionDef) -> Tuple[List[str], List[str]]:
+    """(positional parameter names, keyword-only parameter names)."""
+    a = fn.args
+    return ([p.arg for p in a.posonlyargs] + [p.arg for p in a.args],
+            [p.arg for p in a.kwonlyargs])
+
+
+def _spec_indices(tree: ast.Module) -> Tuple[Optional[int],
+                                             Dict[str, Tuple[int, int]]]:
+    """(SPEC_LEN value, {SPEC_* name: (index, lineno)}) at module scope.
+
+    Understands the two layout idioms used in kernel files::
+
+        SPEC_LEN = 12
+        SPEC_RADIO, SPEC_PPS = range(2)        # or range(lo, hi)
+        SPEC_ETOT = 8
+    """
+    spec_len: Optional[int] = None
+    indices: Dict[str, Tuple[int, int]] = {}
+    for stmt in tree.body:
+        if not isinstance(stmt, ast.Assign):
+            continue
+        value = stmt.value
+        for target in stmt.targets:
+            if isinstance(target, ast.Name) and target.id == "SPEC_LEN" \
+                    and isinstance(value, ast.Constant) \
+                    and isinstance(value.value, int):
+                spec_len = value.value
+            elif isinstance(target, ast.Name) \
+                    and target.id.startswith("SPEC_") \
+                    and isinstance(value, ast.Constant) \
+                    and isinstance(value.value, int):
+                indices[target.id] = (value.value, stmt.lineno)
+            elif isinstance(target, ast.Tuple) and all(
+                    isinstance(e, ast.Name) and e.id.startswith("SPEC_")
+                    for e in target.elts):
+                rng = _range_values(value)
+                if rng is not None and len(rng) == len(target.elts):
+                    for name_node, idx in zip(target.elts, rng):
+                        indices[name_node.id] = (idx, stmt.lineno)
+    return spec_len, indices
+
+
+def _range_values(node: ast.AST) -> Optional[List[int]]:
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id == "range":
+        args = []
+        for a in node.args:
+            if not (isinstance(a, ast.Constant)
+                    and isinstance(a.value, int)):
+                return None
+            args.append(a.value)
+        if 1 <= len(args) <= 3:
+            return list(range(*args))
+    return None
+
+
+@register
+class KernelTripleContracts(Rule):
+    """KRN001: ref/ops signature alignment + SPEC row-layout checks."""
+
+    id = "KRN001"
+    severity = Severity.ERROR
+    title = ("kernels/<name>/ ref.py and ops.py public signatures must "
+             "stay aligned, and SPEC_* row constants must exactly tile "
+             "0..SPEC_LEN-1")
+    scope = "project"
+
+    def check_project(self,
+                      ctxs: List[FileContext]) -> Iterator[Finding]:
+        triples: Dict[str, Dict[str, FileContext]] = {}
+        for ctx in ctxs:
+            m = _KERNEL_DIR.search(os.path.normpath(ctx.path))
+            if m:
+                triples.setdefault(m.group(1), {})[m.group(2)] = ctx
+            yield from self._check_spec_layout(ctx)
+        for name, files in sorted(triples.items()):
+            if "ref" in files and "ops" in files:
+                yield from self._check_signatures(name, files["ref"],
+                                                  files["ops"])
+
+    # -- signature alignment ------------------------------------------------
+    def _check_signatures(self, name: str, ref: FileContext,
+                          ops: FileContext) -> Iterator[Finding]:
+        ref_defs = _public_defs(ref.tree)
+        ops_defs = _public_defs(ops.tree)
+        for ref_name, ref_fn in sorted(ref_defs.items()):
+            if not ref_name.endswith("_ref"):
+                continue
+            stem = ref_name[:-len("_ref")]
+            for candidate in (stem, stem + "_jax"):
+                ops_fn = ops_defs.get(candidate)
+                if ops_fn is not None:
+                    yield from self._compare(name, ref, ref_fn, ops,
+                                             ops_fn)
+            # differently-named entries (e.g. attention_ref vs
+            # flash_attention) carry no name-derived contract
+
+    def _compare(self, kernel: str, ref: FileContext,
+                 ref_fn: ast.FunctionDef, ops: FileContext,
+                 ops_fn: ast.FunctionDef) -> Iterator[Finding]:
+        ref_pos, ref_kw = _sig_names(ref_fn)
+        ops_pos, ops_kw = _sig_names(ops_fn)
+        if ops_pos[:len(ref_pos)] != ref_pos:
+            yield self.finding(
+                ops, ops_fn,
+                f"kernels/{kernel}: `{ops_fn.name}{tuple(ops_pos)}` "
+                f"positional parameters diverge from host oracle "
+                f"`{ref_fn.name}{tuple(ref_pos)}` — equivalence tests "
+                f"would compare different computations")
+        missing = [k for k in ref_kw if k not in ops_kw + ops_pos]
+        if missing:
+            yield self.finding(
+                ops, ops_fn,
+                f"kernels/{kernel}: `{ops_fn.name}` is missing keyword "
+                f"parameter(s) {missing} that the host oracle "
+                f"`{ref_fn.name}` accepts")
+
+    # -- SPEC row layout ----------------------------------------------------
+    def _check_spec_layout(self, ctx: FileContext) -> Iterator[Finding]:
+        spec_len, indices = _spec_indices(ctx.tree)
+        if not indices and spec_len is None:
+            return
+        if indices and spec_len is None:
+            first = min(indices.values(), key=lambda v: v[1])
+            yield Finding(
+                path=ctx.path, line=first[1], col=0, rule=self.id,
+                severity=self.severity,
+                message=f"SPEC_* row constants defined but no "
+                        f"`SPEC_LEN = <int>` in {ctx.path} — the kernel "
+                        f"cannot size its SMEM spec vector")
+            return
+        if spec_len is None:
+            return
+        covered = {}
+        for name, (idx, line) in sorted(indices.items()):
+            if idx >= spec_len or idx < 0:
+                yield Finding(
+                    path=ctx.path, line=line, col=0, rule=self.id,
+                    severity=self.severity,
+                    message=f"`{name} = {idx}` is out of range for "
+                            f"SPEC_LEN = {spec_len}: the kernel would "
+                            f"read past its spec vector")
+            covered.setdefault(idx, name)
+        if indices:
+            missing = sorted(set(range(spec_len)) - set(covered))
+            if missing:
+                line = max(v[1] for v in indices.values())
+                yield Finding(
+                    path=ctx.path, line=line, col=0, rule=self.id,
+                    severity=self.severity,
+                    message=f"SPEC row constants cover "
+                            f"{sorted(covered)} but SPEC_LEN = "
+                            f"{spec_len} expects every row in "
+                            f"0..{spec_len - 1} (missing {missing}) — "
+                            f"layout and length are desynced")

@@ -1,0 +1,120 @@
+"""RNG hygiene rules: seeded-stream pinning.
+
+Every stochastic process in this repo draws from an explicitly seeded
+``np.random.Generator`` — usually a ``SeedSequence`` child spawned by
+``repro.sim.queueing.spawn_streams`` so arrival/link/RTT streams stay
+independent and seeded runs stay pinned bit-for-bit (PR 7).  Two ways
+code has historically broken that:
+
+* touching the legacy *global* ``np.random.*`` API (hidden process-wide
+  state, order-dependent draws) — RNG001;
+* constructing a fresh ``default_rng(<literal>)`` (or worse,
+  ``default_rng()`` = OS entropy) deep inside ``repro.sim`` /
+  ``repro.oracle`` instead of threading the caller's seed — two
+  components silently share or fork a stream and the equivalence matrix
+  rots — RNG002.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.core import (FileContext, Finding, Rule, Severity,
+                                 dotted, register)
+
+#: legacy numpy global-state RNG attributes (the pre-Generator API)
+LEGACY_NP_RANDOM = frozenset({
+    "seed", "rand", "randn", "randint", "random", "random_sample",
+    "ranf", "sample", "random_integers", "choice", "shuffle",
+    "permutation", "uniform", "normal", "standard_normal", "lognormal",
+    "exponential", "poisson", "weibull", "gamma", "beta", "binomial",
+    "geometric", "pareto", "multivariate_normal", "get_state",
+    "set_state", "RandomState",
+})
+
+_NP_RANDOM_PREFIXES = ("np.random.", "numpy.random.")
+
+#: constructors RNG002 audits inside repro.sim / repro.oracle
+_RNG_CTORS = frozenset({
+    "np.random.default_rng", "numpy.random.default_rng", "default_rng",
+    "np.random.Generator", "numpy.random.Generator",
+    "np.random.SeedSequence", "numpy.random.SeedSequence",
+    "SeedSequence",
+})
+
+
+def _literal_seed(node: ast.AST) -> bool:
+    if isinstance(node, ast.UnaryOp):           # -1 parses as USub(1)
+        node = node.operand
+    return isinstance(node, ast.Constant) and isinstance(
+        node.value, (int, float))
+
+
+@register
+class LegacyGlobalRandom(Rule):
+    """RNG001: no legacy global ``np.random.*`` state."""
+
+    id = "RNG001"
+    severity = Severity.ERROR
+    title = ("legacy global np.random.* API forbidden — use a seeded "
+             "np.random.default_rng(...) Generator")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Attribute):
+                name = dotted(node)
+                if name and any(
+                        name == pre + attr
+                        for pre in _NP_RANDOM_PREFIXES
+                        for attr in (node.attr,)) \
+                        and node.attr in LEGACY_NP_RANDOM:
+                    yield self.finding(
+                        ctx, node,
+                        f"legacy global RNG `{name}` pins hidden "
+                        f"process-wide state; draw from a seeded "
+                        f"Generator (np.random.default_rng) instead")
+            elif isinstance(node, ast.ImportFrom):
+                if node.module in ("numpy.random", "numpy.random.mtrand"):
+                    for alias in node.names:
+                        if alias.name in LEGACY_NP_RANDOM:
+                            yield self.finding(
+                                ctx, node,
+                                f"importing legacy `{alias.name}` from "
+                                f"numpy.random; use a seeded Generator")
+
+
+@register
+class FreshSeedInSim(Rule):
+    """RNG002: sim/oracle Generators must flow from an argument."""
+
+    id = "RNG002"
+    severity = Severity.WARNING
+    title = ("repro.sim / repro.oracle RNG construction must thread a "
+             "seed argument or spawn_streams child, not a fresh "
+             "literal / OS-entropy seed")
+
+    SCOPES = ("repro.sim", "repro.oracle")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not ctx.in_module(*self.SCOPES):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func)
+            if name not in _RNG_CTORS:
+                continue
+            short = name.rsplit(".", 1)[-1]
+            if not node.args and not node.keywords:
+                yield self.finding(
+                    ctx, node,
+                    f"`{short}()` seeds from OS entropy — runs become "
+                    f"unreproducible; thread the caller's seed or a "
+                    f"spawn_streams(...) child")
+            elif node.args and _literal_seed(node.args[0]):
+                yield self.finding(
+                    ctx, node,
+                    f"`{short}({ast.unparse(node.args[0])})` hardcodes a "
+                    f"fresh literal seed inside {ctx.module}; seeds must "
+                    f"flow from an argument or spawn_streams(...) so "
+                    f"streams stay independent and pinnable")

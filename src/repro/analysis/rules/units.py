@@ -1,0 +1,77 @@
+"""Unit-suffix hygiene: seconds / bytes / bandwidth never mix raw.
+
+The repo's naming convention carries units in suffixes — ``sojourn_s``,
+``act_bytes``, ``link_bw`` — and conversions are always explicit
+divisions/multiplications (``bytes / bw → s``).  Adding or subtracting
+across suffixes (``lat_s + ship_bytes``) is therefore always a bug:
+a transfer time that forgot to divide by bandwidth, an energy term fed
+raw bytes.  UNIT001 flags ``+`` / ``-`` between operands whose inferred
+unit suffixes differ; products and quotients are unit conversions and
+never flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.core import (FileContext, Finding, Rule, Severity,
+                                 register)
+
+#: suffix → canonical unit; longest-match wins (``_bytes`` before ``_s``)
+_SUFFIX_UNITS = (("_bytes", "bytes"), ("_bw", "bw"), ("_s", "s"))
+
+
+def unit_of(node: ast.AST) -> Optional[str]:
+    """Infer the unit of an expression from naming suffixes.
+
+    Names/attributes carry their suffix unit; indexing keeps the unit of
+    what is indexed; ``a + b`` / ``a - b`` keep the unit when both sides
+    agree.  Anything else (products, calls, literals) is unknown — a
+    multiply or divide is exactly where units legitimately change.
+    """
+    if isinstance(node, ast.Name):
+        return _suffix_unit(node.id)
+    if isinstance(node, ast.Attribute):
+        return _suffix_unit(node.attr)
+    if isinstance(node, ast.Subscript):
+        return unit_of(node.value)
+    if isinstance(node, ast.UnaryOp):
+        return unit_of(node.operand)
+    if isinstance(node, ast.BinOp) and isinstance(node.op,
+                                                  (ast.Add, ast.Sub)):
+        left, right = unit_of(node.left), unit_of(node.right)
+        if left is not None and left == right:
+            return left
+    return None
+
+
+def _suffix_unit(name: str) -> Optional[str]:
+    for suffix, unit in _SUFFIX_UNITS:
+        if name.endswith(suffix) and name != suffix.lstrip("_"):
+            return unit
+    return None
+
+
+@register
+class MixedUnitArithmetic(Rule):
+    """UNIT001: no +/- across _s / _bytes / _bw suffixed operands."""
+
+    id = "UNIT001"
+    severity = Severity.WARNING
+    title = ("adding/subtracting operands with different unit suffixes "
+             "(_s / _bytes / _bw) without an explicit conversion")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.BinOp)
+                    and isinstance(node.op, (ast.Add, ast.Sub))):
+                continue
+            left, right = unit_of(node.left), unit_of(node.right)
+            if left is not None and right is not None and left != right:
+                op = "+" if isinstance(node.op, ast.Add) else "-"
+                yield self.finding(
+                    ctx, node,
+                    f"`{ast.unparse(node.left)} {op} "
+                    f"{ast.unparse(node.right)}` mixes _{left} and "
+                    f"_{right} quantities — convert explicitly "
+                    f"(e.g. bytes / bw → s) before combining")

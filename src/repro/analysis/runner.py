@@ -1,0 +1,116 @@
+"""Drive the rule set over files, directories, or in-memory snippets.
+
+:func:`run_paths` is what the CLI calls; :func:`analyze_source` /
+:func:`analyze_sources` exist so fixture tests can feed the exact same
+pipeline synthetic files with chosen module names (e.g. a fake
+``repro.sim`` module) without touching disk.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis.core import (FileContext, Finding, Rule, Severity,
+                                 build_context, selected_rules)
+
+#: directories never descended into when expanding path arguments
+_SKIP_DIRS = {"__pycache__", ".git", ".hypothesis", ".pytest_cache",
+              "node_modules", ".venv", "venv"}
+
+
+def iter_py_files(paths: Iterable[str]) -> List[str]:
+    """Expand files/directories into a sorted, de-duplicated .py list."""
+    out: List[str] = []
+    seen = set()
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs if d not in _SKIP_DIRS)
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        out.append(os.path.join(root, f))
+        elif p.endswith(".py"):
+            out.append(p)
+        else:
+            raise FileNotFoundError(f"not a .py file or directory: {p}")
+    uniq = []
+    for p in out:
+        key = os.path.normpath(p)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(p)
+    return uniq
+
+
+def _syntax_finding(path: str, err: SyntaxError) -> Finding:
+    return Finding(path=path, line=err.lineno or 1,
+                   col=(err.offset or 1) - 1, rule="SYNTAX",
+                   severity=Severity.ERROR,
+                   message=f"file does not parse: {err.msg}")
+
+
+def run_contexts(ctxs: List[FileContext], rules: List[Rule],
+                 pre: Optional[List[Finding]] = None) -> List[Finding]:
+    """Run rules over parsed contexts; apply suppressions; sort."""
+    findings: List[Finding] = list(pre or ())
+    by_path = {ctx.path: ctx for ctx in ctxs}
+    for rule in rules:
+        if rule.scope == "project":
+            findings.extend(rule.check_project(ctxs))
+        else:
+            for ctx in ctxs:
+                findings.extend(rule.check(ctx))
+    kept = []
+    for f in findings:
+        ctx = by_path.get(f.path)
+        if ctx is not None and ctx.directives.suppresses(f.rule, f.line):
+            continue
+        kept.append(f)
+    return sorted(kept)
+
+
+def run_paths(paths: Iterable[str], *,
+              select: Optional[Iterable[str]] = None,
+              ignore: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Analyze every .py file under ``paths`` with the selected rules."""
+    rules = selected_rules(select, ignore)
+    ctxs: List[FileContext] = []
+    pre: List[Finding] = []
+    for path in iter_py_files(paths):
+        try:
+            ctxs.append(build_context(path))
+        except SyntaxError as err:
+            pre.append(_syntax_finding(path, err))
+    return run_contexts(ctxs, rules, pre)
+
+
+def analyze_source(source: str, *, path: str = "<snippet>.py",
+                   module: str = "",
+                   select: Optional[Iterable[str]] = None,
+                   ignore: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Analyze one in-memory snippet (fixture-test entry point)."""
+    return analyze_sources([(path, module, source)], select=select,
+                           ignore=ignore)
+
+
+def analyze_sources(files: Iterable[Tuple[str, str, str]], *,
+                    select: Optional[Iterable[str]] = None,
+                    ignore: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Analyze ``(path, module, source)`` triples as one project — the
+    way to exercise cross-file rules (KRN001) from fixtures."""
+    rules = selected_rules(select, ignore)
+    ctxs: List[FileContext] = []
+    pre: List[Finding] = []
+    for path, module, source in files:
+        try:
+            ctxs.append(build_context(path, source=source, module=module))
+        except SyntaxError as err:
+            pre.append(_syntax_finding(path, err))
+    return run_contexts(ctxs, rules, pre)
+
+
+def severity_counts(findings: List[Finding]) -> Dict[str, int]:
+    counts = {str(s): 0 for s in Severity}
+    for f in findings:
+        counts[str(f.severity)] += 1
+    return counts

@@ -35,6 +35,9 @@ Usage::
     plan.objective("energy_j")            # [E] joules at the chosen split
     front = co.pareto_front(cost.components(layers, envs))  # [E, L+1] mask
 """
+# repro: module-tags=fma-sensitive
+# (scalarize_weighted must accumulate term-by-term — see its docstring;
+#  DET001 rejects any @ / dot / matmul creeping back into this module)
 from __future__ import annotations
 
 import dataclasses

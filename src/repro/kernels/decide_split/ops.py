@@ -35,6 +35,9 @@ Bit-for-bit notes (why this file looks the way it does):
     runs the kernel in f32 (the TPU-native width) and re-evaluates the
     chosen splits in f64 on the host — O(E) gathers, no matrices.
 """
+# repro: module-tags=fma-sensitive
+# (DET001: a @ / dot / matmul here would let XLA FMA-contract and break
+#  the f64 bitwise equality with the numpy host path described above)
 from __future__ import annotations
 
 from typing import Optional, Sequence

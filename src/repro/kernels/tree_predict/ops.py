@@ -13,6 +13,9 @@ host, leaving the scan multiply-free — nothing for XLA to contract).
 (:mod:`repro.kernels.tree_predict.kernel`): f32, within tolerance, node
 arrays resident in VMEM (interpret mode off-TPU).
 """
+# repro: module-tags=fma-sensitive
+# (DET001: the scan must stay multiply-free/add-only — a dot/matmul
+#  would reintroduce FMA contraction and break the f64 bitwise pin)
 from __future__ import annotations
 
 import jax

@@ -1,0 +1,528 @@
+"""repro.analysis invariant linter: fixture, suppression and self-clean
+tests.
+
+Each shipped rule gets a golden pair — a known-bad snippet it must fire
+on and a clean snippet it must stay silent on — plus suppression
+round-trips and the KRN001 deliberate-desync fixtures the acceptance
+criteria call out.  The self-clean test is the real contract: the
+linter reports zero findings at severity >= warning over ``src/``.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import (REGISTRY, Severity, analyze_source,
+                            analyze_sources, run_paths)
+from repro.analysis.cli import main as cli_main
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+
+def ids(findings):
+    return [f.rule for f in findings]
+
+
+def check(source, *, module="", path="snippet.py", select=None):
+    return analyze_source(textwrap.dedent(source), module=module,
+                          path=path, select=select)
+
+
+# --------------------------------------------------------------------------
+# RNG001 — legacy global np.random.*
+# --------------------------------------------------------------------------
+class TestRNG001:
+    def test_fires_on_legacy_calls(self):
+        bad = """
+            import numpy as np
+            np.random.seed(0)
+            x = np.random.rand(4)
+            y = np.random.randint(0, 10)
+        """
+        found = check(bad, select=["RNG001"])
+        assert ids(found) == ["RNG001"] * 3
+
+    def test_fires_on_randomstate_and_import(self):
+        bad = """
+            import numpy as np
+            from numpy.random import rand
+            rs = np.random.RandomState(3)
+        """
+        assert ids(check(bad, select=["RNG001"])) == ["RNG001"] * 2
+
+    def test_silent_on_generator_api(self):
+        clean = """
+            import numpy as np
+            rng = np.random.default_rng(0)
+            ss = np.random.SeedSequence(42)
+            gen = np.random.Generator(np.random.PCG64(ss))
+            x = rng.normal(size=3)
+        """
+        assert check(clean, select=["RNG001"]) == []
+
+
+# --------------------------------------------------------------------------
+# RNG002 — fresh literal/OS-entropy seeds inside repro.sim / repro.oracle
+# --------------------------------------------------------------------------
+class TestRNG002:
+    BAD = """
+        import numpy as np
+        def arrivals():
+            rng = np.random.default_rng(1234)
+            return rng.random(8)
+        def entropy():
+            return np.random.default_rng()
+    """
+
+    def test_fires_inside_sim(self):
+        found = check(self.BAD, module="repro.sim.arrivals",
+                      select=["RNG002"])
+        assert ids(found) == ["RNG002"] * 2
+
+    def test_fires_inside_oracle(self):
+        assert ids(check(self.BAD, module="repro.oracle.online",
+                         select=["RNG002"])) == ["RNG002"] * 2
+
+    def test_silent_outside_scope(self):
+        # benchmarks/examples may pin literal seeds freely
+        assert check(self.BAD, module="repro.core.workloads",
+                     select=["RNG002"]) == []
+        assert check(self.BAD, module="", select=["RNG002"]) == []
+
+    def test_silent_on_threaded_seed(self):
+        clean = """
+            import numpy as np
+            from repro.sim.queueing import spawn_streams
+            def make(seed):
+                rng = np.random.default_rng(seed)
+                child = np.random.default_rng(spawn_streams(seed, 2)[0])
+                return rng, child
+            class P:
+                def __post_init__(self):
+                    self._rng = np.random.default_rng(self.seed)
+        """
+        assert check(clean, module="repro.sim.state",
+                     select=["RNG002"]) == []
+
+
+# --------------------------------------------------------------------------
+# DET001 — matmul in fma-sensitive modules
+# --------------------------------------------------------------------------
+class TestDET001:
+    def test_fires_in_tagged_module(self):
+        bad = """
+            # repro: module-tags=fma-sensitive
+            import numpy as np
+            import jax.numpy as jnp
+            def scalarize(comp, w):
+                return comp @ w
+            def lower(a, b):
+                return jnp.dot(a, b) + np.einsum("ij,j->i", a, b)
+        """
+        found = check(bad, select=["DET001"])
+        assert ids(found) == ["DET001"] * 3
+
+    def test_silent_without_tag(self):
+        bad = """
+            import numpy as np
+            def scalarize(comp, w):
+                return comp @ w
+        """
+        assert check(bad, select=["DET001"]) == []
+
+    def test_silent_on_sequential_accumulation(self):
+        clean = """
+            # repro: module-tags=fma-sensitive
+            import numpy as np
+            def scalarize(comp, w):
+                out = comp[..., 0] * w[0]
+                for k in range(1, w.size):
+                    out = out + comp[..., k] * w[k]
+                return out
+        """
+        assert check(clean, select=["DET001"]) == []
+
+
+# --------------------------------------------------------------------------
+# DET002 — wall clock in virtual-time modules
+# --------------------------------------------------------------------------
+class TestDET002:
+    BAD = """
+        import time
+        from datetime import datetime
+        def step(clock):
+            now = time.time()
+            t = time.perf_counter()
+            stamp = datetime.now()
+            return now + t
+    """
+
+    def test_fires_in_sim_and_serve(self):
+        assert ids(check(self.BAD, module="repro.sim.events",
+                         select=["DET002"])) == ["DET002"] * 3
+        assert ids(check(self.BAD, module="repro.serve.continuous",
+                         select=["DET002"])) == ["DET002"] * 3
+
+    def test_silent_outside_scope(self):
+        # benchmarks and the profiler measure real wall time by design
+        assert check(self.BAD, module="repro.core.profiler",
+                     select=["DET002"]) == []
+
+    def test_silent_on_virtual_clock(self):
+        clean = """
+            def step(clock, queue):
+                now = clock.now
+                evt = queue.pop(now)
+                return now, evt
+        """
+        assert check(clean, module="repro.sim.events",
+                     select=["DET002"]) == []
+
+
+# --------------------------------------------------------------------------
+# JIT001 — jitted functions closing over mutable state
+# --------------------------------------------------------------------------
+class TestJIT001:
+    def test_fires_on_mutable_global_read(self):
+        bad = """
+            import jax
+            CACHE = {}
+            @jax.jit
+            def f(x):
+                return x + CACHE["bias"]
+        """
+        assert ids(check(bad, select=["JIT001"])) == ["JIT001"]
+
+    def test_fires_on_rebound_global_and_attr_store(self):
+        bad = """
+            import jax
+            SCALE = 1.0
+            SCALE = 2.0
+            @jax.jit
+            def g(self, x):
+                self.cached = x * SCALE
+                return self.cached
+        """
+        assert sorted(ids(check(bad, select=["JIT001"]))) == \
+            ["JIT001", "JIT001"]
+
+    def test_silent_on_constant_closure(self):
+        clean = """
+            import functools
+            import jax
+            import numpy as np
+            TABLE = np.arange(8.0)        # immutable-by-convention const
+            @functools.partial(jax.jit, static_argnames=("n",))
+            def f(x, n):
+                local = {}
+                local["y"] = x * TABLE[0]
+                return local["y"] + n
+        """
+        assert check(clean, select=["JIT001"]) == []
+
+
+# --------------------------------------------------------------------------
+# JIT002 — Python branches on traced arguments
+# --------------------------------------------------------------------------
+class TestJIT002:
+    def test_fires_on_if_and_while(self):
+        bad = """
+            import jax
+            @jax.jit
+            def f(x, lo):
+                if x > 0:
+                    return x
+                while lo < 4:
+                    lo = lo + 1
+                return lo
+        """
+        assert ids(check(bad, select=["JIT002"])) == ["JIT002"] * 2
+
+    def test_static_argnames_exempt(self):
+        clean = """
+            import functools
+            import jax
+            import jax.numpy as jnp
+            @functools.partial(jax.jit, static_argnames=("causal",))
+            def f(q, causal):
+                if causal:
+                    return jnp.tril(q)
+                return jnp.where(q > 0, q, 0.0)
+        """
+        assert check(clean, select=["JIT002"]) == []
+
+    def test_static_argnums_and_is_none_exempt(self):
+        clean = """
+            import functools
+            import jax
+            @functools.partial(jax.jit, static_argnums=(1,))
+            def f(x, mode, scale=None):
+                if scale is None:
+                    scale = 1.0
+                if mode == "fast":
+                    return x * scale
+                return x
+        """
+        assert check(clean, select=["JIT002"]) == []
+
+
+# --------------------------------------------------------------------------
+# KRN001 — kernel-triple signature + SPEC layout contracts
+# --------------------------------------------------------------------------
+GOOD_KERNEL = """
+    SPEC_A, SPEC_B, SPEC_C = range(3)
+    SPEC_D = 3
+    SPEC_LEN = 4
+    def pack_spec(weights):
+        return weights
+"""
+
+GOOD_REF = """
+    def toy_ref(x, w, scale=1.0, *, clip=None):
+        return x * w * scale
+"""
+
+GOOD_OPS = """
+    def toy(x, w, scale=1.0, *, clip=None, block=128, interpret=None):
+        return x * w * scale
+"""
+
+
+def kernel_fixture(name, ref=GOOD_REF, ops=GOOD_OPS, kernel=GOOD_KERNEL):
+    files = [
+        (f"src/repro/kernels/{name}/ref.py",
+         f"repro.kernels.{name}.ref", textwrap.dedent(ref)),
+        (f"src/repro/kernels/{name}/ops.py",
+         f"repro.kernels.{name}.ops", textwrap.dedent(ops)),
+        (f"src/repro/kernels/{name}/kernel.py",
+         f"repro.kernels.{name}.kernel", textwrap.dedent(kernel)),
+    ]
+    return analyze_sources(files, select=["KRN001"])
+
+
+class TestKRN001:
+    def test_clean_triple_is_silent(self):
+        assert kernel_fixture("toy") == []
+
+    def test_spec_len_desync_row_out_of_range(self):
+        # the historical hazard: rows grown 9 -> 12 but SPEC_LEN stale
+        bad = """
+            SPEC_A, SPEC_B, SPEC_C = range(3)
+            SPEC_WAIT, SPEC_TEXC, SPEC_W4 = range(3, 6)
+            SPEC_LEN = 3
+        """
+        found = kernel_fixture("toy", kernel=bad)
+        assert ids(found) == ["KRN001"] * 3     # rows 3,4,5 out of range
+        assert "out of range" in found[0].message
+
+    def test_spec_len_desync_unused_rows(self):
+        # the inverse: SPEC_LEN bumped, constants not re-laid
+        bad = """
+            SPEC_A, SPEC_B = range(2)
+            SPEC_LEN = 4
+        """
+        found = kernel_fixture("toy", kernel=bad)
+        assert ids(found) == ["KRN001"]
+        assert "desynced" in found[0].message
+
+    def test_spec_constants_without_len(self):
+        found = kernel_fixture("toy", kernel="SPEC_A, SPEC_B = range(2)\n")
+        assert ids(found) == ["KRN001"]
+        assert "SPEC_LEN" in found[0].message
+
+    def test_signature_drift_positional(self):
+        drifted = """
+            def toy(x, weights, scale=1.0, *, clip=None):
+                return x
+        """
+        found = kernel_fixture("toy", ops=drifted)
+        assert ids(found) == ["KRN001"]
+        assert "positional parameters diverge" in found[0].message
+
+    def test_signature_drift_missing_kwonly(self):
+        drifted = """
+            def toy(x, w, scale=1.0, *, block=128):
+                return x
+        """
+        found = kernel_fixture("toy", ops=drifted)
+        assert ids(found) == ["KRN001"]
+        assert "clip" in found[0].message
+
+    def test_jax_suffix_pairing(self):
+        ref = """
+            def toy_ref(x, w):
+                return x * w
+        """
+        ops = """
+            def toy_jax(x, wrong_name):
+                return x
+        """
+        found = kernel_fixture("toy", ref=ref, ops=ops)
+        assert ids(found) == ["KRN001"]
+
+    def test_real_decide_split_layout_is_clean(self):
+        path = os.path.join(SRC, "repro/kernels/decide_split/kernel.py")
+        assert [f for f in run_paths([path], select=["KRN001"])] == []
+
+
+# --------------------------------------------------------------------------
+# UNIT001 — mixed unit-suffix arithmetic
+# --------------------------------------------------------------------------
+class TestUNIT001:
+    def test_fires_on_mixed_add_and_sub(self):
+        bad = """
+            def cost(lat_s, ship_bytes, link_bw):
+                a = lat_s + ship_bytes
+                b = ship_bytes - link_bw
+                return a, b
+        """
+        assert ids(check(bad, select=["UNIT001"])) == ["UNIT001"] * 2
+
+    def test_fires_through_nested_same_unit_sums(self):
+        bad = """
+            def cost(wait_s, service_s, act_bytes):
+                return wait_s + service_s + act_bytes
+        """
+        assert ids(check(bad, select=["UNIT001"])) == ["UNIT001"]
+
+    def test_silent_on_conversions_and_same_unit(self):
+        clean = """
+            def cost(lat_s, ship_bytes, link_bw, wait_s):
+                xfer_s = lat_s + ship_bytes / max(link_bw, 1.0)
+                total_s = xfer_s + wait_s
+                return total_s
+        """
+        assert check(clean, select=["UNIT001"]) == []
+
+
+# --------------------------------------------------------------------------
+# Suppressions: per-line, per-file, round-trips
+# --------------------------------------------------------------------------
+class TestSuppressions:
+    BAD_LINE = """
+        import numpy as np
+        np.random.seed(0)
+    """
+
+    def test_line_disable_suppresses(self):
+        src = """
+            import numpy as np
+            np.random.seed(0)  # repro: disable=RNG001
+        """
+        assert check(src, select=["RNG001"]) == []
+
+    def test_line_disable_is_line_scoped(self):
+        src = """
+            import numpy as np
+            np.random.seed(0)  # repro: disable=RNG001
+            np.random.seed(1)
+        """
+        found = check(src, select=["RNG001"])
+        assert len(found) == 1 and found[0].line == 4
+
+    def test_wrong_rule_id_does_not_suppress(self):
+        src = """
+            import numpy as np
+            np.random.seed(0)  # repro: disable=DET002
+        """
+        assert ids(check(src, select=["RNG001"])) == ["RNG001"]
+
+    def test_disable_all_on_line(self):
+        src = """
+            import numpy as np
+            np.random.seed(0)  # repro: disable=all
+        """
+        assert check(src) == []
+
+    def test_file_disable(self):
+        src = """
+            # repro: disable-file=RNG001
+            import numpy as np
+            np.random.seed(0)
+            np.random.rand(2)
+        """
+        assert check(src, select=["RNG001"]) == []
+
+    def test_directive_inside_string_is_inert(self):
+        src = '''
+            import numpy as np
+            DOC = "example:  # repro: disable-file=RNG001"
+            np.random.seed(0)
+        '''
+        assert ids(check(src, select=["RNG001"])) == ["RNG001"]
+
+    def test_round_trip_remove_comment_refires(self):
+        suppressed = """
+            import numpy as np
+            np.random.seed(0)  # repro: disable=RNG001
+        """
+        assert check(suppressed, select=["RNG001"]) == []
+        refired = suppressed.replace("  # repro: disable=RNG001", "")
+        assert ids(check(refired, select=["RNG001"])) == ["RNG001"]
+
+
+# --------------------------------------------------------------------------
+# Framework: severity filtering, syntax errors, registry, CLI
+# --------------------------------------------------------------------------
+class TestFramework:
+    def test_all_eight_rules_registered(self):
+        expected = {"RNG001", "RNG002", "DET001", "DET002", "JIT001",
+                    "JIT002", "KRN001", "UNIT001"}
+        assert expected <= set(REGISTRY)
+        for rid in expected:
+            assert REGISTRY[rid].title
+            assert REGISTRY[rid].severity in tuple(Severity)
+
+    def test_syntax_error_becomes_finding(self):
+        found = analyze_source("def broken(:\n", path="broken.py")
+        assert ids(found) == ["SYNTAX"]
+        assert found[0].severity is Severity.ERROR
+
+    def test_unknown_select_raises(self):
+        with pytest.raises(ValueError, match="NOPE999"):
+            analyze_source("x = 1\n", select=["NOPE999"])
+
+    def test_cli_json_and_exit_codes(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text("import numpy as np\nnp.random.seed(0)\n")
+        rc = cli_main(["--format", "json", str(bad)])
+        payload = json.loads(capsys.readouterr().out)
+        assert rc == 1
+        assert payload["counts"]["error"] == 1
+        assert payload["findings"][0]["rule"] == "RNG001"
+        # --select an unrelated rule: clean exit
+        assert cli_main(["--select", "DET001", str(bad)]) == 0
+        capsys.readouterr()
+        # fail-level above the finding severity: report but exit 0
+        warn = tmp_path / "warn.py"
+        warn.write_text("def f(a_s, b_bytes):\n    return a_s + b_bytes\n")
+        assert cli_main(["--fail-level", "error", str(warn)]) == 0
+        capsys.readouterr()
+
+    def test_cli_list_rules(self, capsys):
+        assert cli_main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        assert "KRN001" in out and "RNG001" in out
+
+
+# --------------------------------------------------------------------------
+# Self-clean: the tree's invariants hold, machine-checked
+# --------------------------------------------------------------------------
+class TestSelfClean:
+    def test_src_is_clean_at_warning_and_above(self):
+        found = [f for f in run_paths([SRC])
+                 if f.severity >= Severity.WARNING]
+        assert found == [], "\n".join(f.render() for f in found)
+
+    def test_module_main_exits_zero_on_src(self):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "src"],
+            cwd=ROOT, capture_output=True, text=True,
+            env={**os.environ,
+                 "PYTHONPATH": SRC + os.pathsep
+                 + os.environ.get("PYTHONPATH", "")})
+        assert proc.returncode == 0, proc.stdout + proc.stderr
