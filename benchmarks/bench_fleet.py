@@ -69,7 +69,7 @@ def make_links(n_nodes: int, horizon: float) -> ClusterLinks:
 
 
 def run_engine(engine: str, n_tasks: int, n_nodes: int,
-               horizon: float) -> tuple[float, int]:
+               horizon: float, obs=None) -> tuple[float, int]:
     """(wall seconds, events processed) for one engine pass."""
     arr = diurnal_arrivals(n_tasks / horizon * 1.2, horizon=horizon,
                            amplitude=0.6, period_s=horizon / 2,
@@ -80,7 +80,7 @@ def run_engine(engine: str, n_tasks: int, n_nodes: int,
     t0 = time.perf_counter()
     tel = simulate_stream(tasks, arr, nodes, policy="min_min",
                           links=links, link_update_dt=LINK_DT,
-                          engine=engine)
+                          engine=engine, obs=obs)
     dt = time.perf_counter() - t0
     assert len(tel.records) == len(arr)
     # finish pops + arrival-batch pops + link-tick pops (the host loop's
@@ -89,6 +89,40 @@ def run_engine(engine: str, n_tasks: int, n_nodes: int,
     events = len(arr) + tel.counters.get("replans", 0) \
         + int(tel.counters.get("link_refreshes", 0) / max(n_nodes, 1))
     return dt, events
+
+
+def obs_gate(n_tasks: int, n_nodes: int, horizon: float,
+             t_untraced: float, reps: int) -> dict:
+    """The observability gate: a traced fleet run must stay within 10%
+    of the untraced wall clock (zero-perturbation in time, not just in
+    results), and its Chrome export must pass the span-pairing checker.
+    Min-of-reps on both sides keeps the ratio off scheduler noise."""
+    from repro.obs import Tracer, validate_chrome
+    t_plain = min(min(run_engine("fleet", n_tasks, n_nodes, horizon)[0]
+                      for _ in range(reps)), t_untraced)
+    t_traced, tracer = np.inf, None
+    for _ in range(reps):
+        tr = Tracer()
+        dt = run_engine("fleet", n_tasks, n_nodes, horizon, obs=tr)[0]
+        if dt < t_traced:
+            t_traced, tracer = dt, tr
+    assert t_traced <= 1.10 * t_plain, (
+        f"tracing overhead {t_traced / t_plain - 1.0:+.1%} > 10% at "
+        f"tasks={n_tasks}, n_nodes={n_nodes} "
+        f"({t_traced*1e3:.1f}ms traced vs {t_plain*1e3:.1f}ms untraced)")
+    stats = validate_chrome(tracer.export_chrome(None))
+    # every task contributes at least its sojourn + service pair
+    assert stats["n_spans"] >= 2 * n_tasks, stats
+    return {
+        "name": f"fleet_traced_t{n_tasks}_n{n_nodes}",
+        "engine": "fleet+obs",
+        "n_tasks": n_tasks,
+        "n_nodes": n_nodes,
+        "total_ms": t_traced * 1e3,
+        "untraced_ms": t_plain * 1e3,
+        "trace_overhead": t_traced / t_plain - 1.0,
+        **stats,
+    }
 
 
 def main(smoke: bool = False) -> list[dict]:
@@ -135,6 +169,8 @@ def main(smoke: bool = False) -> list[dict]:
                 assert speedup >= 20.0, (
                     f"fleet speedup {speedup:.1f}x < 20x at the largest "
                     f"config (tasks={n_tasks}, n_nodes={n_nodes})")
+            rows.append(obs_gate(n_tasks, n_nodes, horizon, t_fleet,
+                                 max(reps, 3)))
     if not smoke:                        # smoke must not clobber the baseline
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         with open(os.path.join(root, "BENCH_6.json"), "w") as f:

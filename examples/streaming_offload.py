@@ -15,10 +15,17 @@ seams working together:
     price) front alive and re-picks as the channel flips, vs the
     commit-at-admission scalarised policy;
   * telemetry — p50/p99 completion, deadline misses, energy, node
-    utilisation and re-plan counters in the ``results/`` record schema.
+    utilisation and re-plan counters in the ``results/`` record schema;
+  * observability — a :class:`repro.obs.Tracer` rides along and exports
+    the run as ``results/trace.json`` (Chrome trace-event JSON): open it
+    in https://ui.perfetto.dev to see per-node tracks with each task's
+    ``sojourn ⊃ queue_wait · service`` lifecycle, plus replan /
+    split-repick / link-drift instants.
 
 Run:  PYTHONPATH=src python examples/streaming_offload.py
 """
+import os
+
 import numpy as np
 
 from repro import sim
@@ -26,6 +33,7 @@ from repro.core import offload as off
 from repro.core import scheduler as sch
 from repro.core.workloads import WorkloadConfig
 from repro.hw import EDGE_DEVICES, get_device
+from repro.obs import Tracer, validate_chrome
 
 
 def main() -> None:
@@ -66,10 +74,12 @@ def main() -> None:
         return rec
 
     planner.complete = complete_and_keep
+    tracer = Tracer()
     tel = sim.simulate_stream(tasks, arrivals, nodes, policy="min_min",
                               links=links, link_update_dt=0.25,
                               split_planner=planner, split_env=split_env,
-                              split_layers=layers, rebalance=True)
+                              split_layers=layers, rebalance=True,
+                              obs=tracer)
 
     print("\n== run telemetry (results/-schema record) ==")
     print(tel.table())
@@ -121,6 +131,15 @@ def main() -> None:
     assert re_cost.mean() <= ad_cost.mean() + 1e-12
     print("\n[ok] splits switched under drift and every pick stayed on "
           "the live Pareto front")
+
+    # -- export the trace for Perfetto ------------------------------------
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    trace_path = os.path.join(root, "results", "trace.json")
+    stats = validate_chrome(tracer.export_chrome(trace_path))
+    print(f"\n== trace ==\n  wrote {os.path.relpath(trace_path, root)}: "
+          f"{stats['n_spans']} spans + {stats['n_instants']} instants "
+          f"on {stats['n_tracks']} tracks — open in "
+          f"https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

@@ -114,15 +114,17 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
-    t0 = time.time()
+    # perf_counter, not time.time: these are durations, and wall-clock
+    # steps (NTP slew) would corrupt the lower/compile split
+    t0 = time.perf_counter()
     try:
         step = assemble(cfg, shape, mesh, seq_shard_cache=seq_shard_cache,
                         extra_cfg_kw=extra_cfg_kw)
         with mesh:
             lowered = step.jitted.lower(*step.arg_specs)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
             mem = compiled.memory_analysis()
             from repro.roofline import normalize_cost_analysis
             cost = normalize_cost_analysis(compiled.cost_analysis())

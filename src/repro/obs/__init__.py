@@ -1,0 +1,40 @@
+"""repro.obs — zero-perturbation observability: tracing, metrics,
+Perfetto/Prometheus export.
+
+The profiling premise of the paper — capture per-run data, make
+offloading decisions predictable — applied to our own stack: every
+runtime subsystem (both sim engines, the queueing layer, the online
+oracle, both serving engines) accepts an ``obs=`` tracer and emits
+
+  * per-task lifecycle **spans** (``sojourn ⊃ queue_wait · service ·
+    transfer``), one track per node/pool, stamped in virtual time
+    inside ``repro.sim`` and wall time in ``repro.serve``;
+  * **instant events** for the control plane: replans, split re-picks,
+    pool saturation, Page–Hinkley drift triggers, oracle refits,
+    registry publishes;
+  * **metrics** via :class:`MetricsRegistry` — counters, gauges, and
+    fixed-boundary histograms with a Prometheus text-exposition dump.
+
+The hard contract is *zero perturbation*: the default
+:data:`NULL_TRACER` no-ops every hook, and a live :class:`Tracer` only
+observes values the engines already compute — no RNG draws, no float-
+path changes — so traced runs are bit-for-bit identical to untraced
+ones and every engine-equivalence pin holds with tracing on
+(``tests/test_obs.py``).
+
+Export: :func:`export_chrome` writes Chrome trace-event JSON loadable
+in Perfetto; :func:`validate_chrome` is the span-pairing checker;
+``Tracer.last(n)`` is the bounded flight recorder for post-mortems.
+See ``docs/observability.md``.
+"""
+from repro.obs.chrome import export_chrome, validate_chrome
+from repro.obs.metrics import (LATENCY_BOUNDARIES, Counter, Gauge,
+                               Histogram, MetricsRegistry)
+from repro.obs.trace import (NULL_TRACER, InstantEvent, NullTracer,
+                             SpanEvent, Tracer)
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "SpanEvent", "InstantEvent",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "LATENCY_BOUNDARIES", "export_chrome", "validate_chrome",
+]

@@ -43,6 +43,7 @@ from repro.core.costs import (AccelSpec, PredictorCost,
                               default_layer_features)
 from repro.core.offload import DEFAULT_EFFICIENCY, LayerCost
 from repro.core.predictors.common import normalised_rmse
+from repro.obs.trace import NULL_TRACER
 from repro.oracle.registry import PredictorRegistry
 
 
@@ -162,6 +163,7 @@ class OnlineOracle:
         self.refits = 0
         self._refit_pending = False
         self.telemetry = None
+        self.obs = NULL_TRACER                 # set by simulate_stream
 
     # -- serving ----------------------------------------------------------
     @property
@@ -238,6 +240,9 @@ class OnlineOracle:
         if drift:
             self.drift_triggers += 1
             self._count("oracle_drift_triggers")
+            if self.obs.enabled:
+                self.obs.instant("oracle", "ph_drift", float(now),
+                                 args={"residual": r})
             self.detector.reset()
             if self.refit_on_drift:
                 # quarantine the window: its labels straddle the change
@@ -320,11 +325,15 @@ class OnlineOracle:
             fresh.fit(x, y)
         version = self.registry.publish(
             fresh, tag=f"refit@{now:.3f}",
-            meta={"window": len(y), "nrmse_before": self.rolling_nrmse()})
+            meta={"window": len(y), "nrmse_before": self.rolling_nrmse()},
+            ts=now)
         self.gain, self.bias = 1.0, 0.0
         self.detector.reset()
         self.refits += 1
         self._count("oracle_refits")
+        if self.obs.enabled:
+            self.obs.instant("oracle", "oracle_refit", float(now),
+                             args={"version": version, "window": len(y)})
         return version
 
     # -- telemetry --------------------------------------------------------

@@ -42,10 +42,12 @@ class PredictorRegistry:
     CURRENT = "CURRENT.json"
 
     def __init__(self, root: Optional[str] = None, keep: int = 8):
+        from repro.obs.trace import NULL_TRACER
         if keep < 1:
             raise ValueError(f"keep must be >= 1, got {keep}")
         self.root = root
         self.keep = keep
+        self.obs = NULL_TRACER           # set by simulate_stream
         self._lock = threading.Lock()
         self._history: dict[int, Snapshot] = {}
         self._current: Optional[Snapshot] = None
@@ -81,12 +83,15 @@ class PredictorRegistry:
 
     # -- writes -----------------------------------------------------------
     def publish(self, model, tag: str = "",
-                meta: Optional[dict] = None) -> int:
+                meta: Optional[dict] = None,
+                ts: float = 0.0) -> int:
         """Register ``model`` as the next version and atomically swap the
         current pointer to it; returns the new version number.  Versions
         come from a monotonic counter — publishing after a rollback
         mints a *fresh* number rather than overwriting the rolled-past
-        snapshot (history and on-disk bundles stay intact)."""
+        snapshot (history and on-disk bundles stay intact).  ``ts`` is
+        the caller's clock reading for the publish instant a live
+        tracer records (virtual time from the oracle's refit path)."""
         with self._lock:
             v = self._next_version
             self._next_version += 1
@@ -97,6 +102,9 @@ class PredictorRegistry:
             while len(self._history) > self.keep:
                 del self._history[min(self._history)]
             self._current = snap                 # the atomic swap
+        if self.obs.enabled:
+            self.obs.instant("oracle", "registry_publish", float(ts),
+                             args={"version": v, "tag": tag})
         return v
 
     def rollback(self, version: int) -> Snapshot:

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import build_model
+from repro.obs.trace import NULL_TRACER
 from repro.serve.engine import Request
 
 
@@ -66,7 +67,7 @@ class ContinuousBatchEngine:
                  seed: int = 0, cost=None, link_bw=1.25e9,
                  offload_device=None, offload_edge=None,
                  decision_backend: str = "numpy",
-                 clock=None, step_latency_s: float = 5e-3):
+                 clock=None, step_latency_s: float = 5e-3, obs=None):
         assert cfg.family in ("dense", "moe", "vlm") \
             and cfg.attn_kind == "gqa", \
             "continuous batching requires the vector-position GQA decode path"
@@ -87,6 +88,7 @@ class ContinuousBatchEngine:
             clock = Clock()
         self.clock = clock
         self.step_latency_s = float(step_latency_s)
+        self.obs = obs if obs is not None else NULL_TRACER
         self.replans = 0
         self.params = self.api.init_params(jax.random.key(seed))
         self.cache = self.api.init_cache(slots, max_len)
@@ -140,10 +142,18 @@ class ContinuousBatchEngine:
         req.offload = decide_all(layers, envs, cost=self.cost,
                                  backend=self.decision_backend)[0]
         self.replans += 1
+        if self.obs.enabled:
+            self.obs.instant("continuous_engine", "replan",
+                             self.clock.now, tid=req.rid,
+                             args={"split": int(req.offload.split)})
 
     # -- admission ------------------------------------------------------------
     def _admit(self, req: Request, slot: int):
         req.admitted_at = self.clock.now
+        if self.obs.enabled:
+            self.obs.instant("continuous_engine", "admit",
+                             self.clock.now, tid=req.rid,
+                             args={"slot": slot})
         if self.cost is not None:
             self._plan_offload(req)
         batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
@@ -194,6 +204,14 @@ class ContinuousBatchEngine:
                         or self.slot_pos[s] >= self.max_len - 1:
                     done.append(req)
                     self.slot_req[s] = None
+                    if self.obs.enabled:
+                        # virtual-clock lifecycle on the shared time axis:
+                        # sojourn [arrived, now] ⊃ queue_wait [arrived,
+                        # admitted] · service [admitted, now]
+                        self.obs.task_spans(
+                            "continuous_engine", req.rid,
+                            f"req{req.rid}", req.arrived_at,
+                            req.admitted_at, self.clock.now)
         return done
 
     @property

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import build_model
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -66,13 +67,16 @@ class ServeEngine:
     """
 
     def __init__(self, cfg, *, batch_size: int = 4, max_len: int = 256,
-                 seed: int = 0, cost=None, decision_backend: str = "numpy"):
+                 seed: int = 0, cost=None, decision_backend: str = "numpy",
+                 obs=None):
         self.cfg = cfg
         self.api = build_model(cfg, impl="naive")
         self.batch_size = batch_size
         self.max_len = max_len
         self.cost = cost
         self.decision_backend = decision_backend
+        self.obs = obs if obs is not None else NULL_TRACER
+        self._batches = 0                # obs track row per batch
         self.params = self.api.init_params(jax.random.key(seed))
         self._prefill = jax.jit(
             lambda p, b: self.api.prefill(p, b, max_len))
@@ -103,15 +107,15 @@ class ServeEngine:
             batch["frames"] = jnp.asarray(frames)
         logits, cache = self._prefill(self.params, batch)
         jax.block_until_ready(logits)
-        self.stats.prefill_s += \
-            time.perf_counter() - t0  # repro: disable=DET002 (measurement)
+        t_pf = time.perf_counter()  # repro: disable=DET002 (measurement)
+        self.stats.prefill_s += t_pf - t0
 
         key = jax.random.key(seed)
         out = np.zeros((b, max_new), np.int32)
         tok = self._sample(logits[:, -1], temperature, key)
         jax.block_until_ready(tok)
-        self.last_first_token_s = \
-            time.perf_counter() - t0  # repro: disable=DET002 (measurement)
+        t_ft = time.perf_counter()  # repro: disable=DET002 (measurement)
+        self.last_first_token_s = t_ft - t0
         t1 = time.perf_counter()  # repro: disable=DET002 (real decode wall time)
         for i in range(max_new):
             out[:, i] = np.asarray(tok[:, 0])
@@ -119,9 +123,19 @@ class ServeEngine:
             key, sub = jax.random.split(key)
             tok = self._sample(logits[:, -1], temperature, sub)
         jax.block_until_ready(logits)
-        self.stats.decode_s += \
-            time.perf_counter() - t1  # repro: disable=DET002 (measurement)
+        t_end = time.perf_counter()  # repro: disable=DET002 (measurement)
+        self.stats.decode_s += t_end - t1
         self.stats.tokens_out += b * max_new
+        if self.obs.enabled:
+            # the spans reuse the already-measured wall readings above —
+            # tracing adds no perf_counter calls to the serving path
+            bid = self._batches
+            self._batches += 1
+            self.obs.span("serve_engine", "prefill", t0, t_pf, tid=bid,
+                          args={"batch": b})
+            self.obs.instant("serve_engine", "first_token", t_ft, tid=bid)
+            self.obs.span("serve_engine", "decode", t1, t_end, tid=bid,
+                          args={"tokens": b * max_new})
         return out
 
     @staticmethod

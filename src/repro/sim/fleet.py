@@ -53,6 +53,7 @@ import numpy as np
 from repro.core import decisions as dec
 from repro.core import scheduler as sch
 from repro.core.offload import DEFAULT_EFFICIENCY
+from repro.obs.trace import NULL_TRACER
 from repro.sim.state import ClusterLinks, DriftingEnv
 from repro.sim.telemetry import Telemetry
 
@@ -227,7 +228,8 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
                    rebalance: bool = False,
                    pools=None, rtt=None,
                    saturation_threshold: Optional[float] = None,
-                   telemetry: Optional[Telemetry] = None) -> Telemetry:
+                   telemetry: Optional[Telemetry] = None,
+                   obs=None) -> Telemetry:
     """Time-slabbed streaming simulation, bit-for-bit (f64) equal to
     ``simulate_stream(..., engine="event")`` on every supported
     configuration — see the module docstring for what is drained as
@@ -289,8 +291,12 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
                          "split_layers= without a split_planner")
 
     telemetry = telemetry if telemetry is not None else Telemetry()
+    obs = obs if obs is not None else NULL_TRACER
+    if pools is not None:
+        pools.obs = obs
     if split_planner is not None:
         split_planner.telemetry = telemetry
+        split_planner.obs = obs
 
     def layers_for(task: sch.Task):
         if callable(split_layers):
@@ -515,6 +521,13 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
         bi += 1
     if n_batches:
         telemetry.count("replans", n_batches)
+        if obs.enabled:
+            # same replan instants the host loop emits per arrive event,
+            # as one deferred column batch (the 10%-overhead gate in
+            # bench_fleet holds because the traced hot path only pays
+            # appends, never a per-event Python loop)
+            obs.instant_arrays("scheduler", "replan", batch_times,
+                               args_cols={"batch": sizes})
     if min_min and n_tasks:
         telemetry.count("column_refreshes", n_tasks)
 
@@ -573,6 +586,14 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
             + (int(changed1.sum()) if changed1 is not None else 0)
         if n_refresh:
             telemetry.count("link_refreshes", n_refresh)
+        if obs.enabled:
+            per_tick = np.concatenate(
+                [changed1.sum(axis=1) if changed1 is not None
+                 else np.zeros(0, np.int64), changed2.sum(axis=1)])
+            drifted = np.flatnonzero(per_tick)
+            obs.instant_arrays("scheduler", "link_drift",
+                               tick_times[drifted],
+                               args_cols={"nodes": per_tick[drifted]})
 
     # -- offload splits
     split_by_rid: Optional[list] = None
@@ -685,4 +706,13 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
             switches=None if switches_by_rid is None
             else [switches_by_rid[r] for r in rid_o],
             transfer_s=None if rtt_draws is None else rtt_draws[ord_p])
+        if obs.enabled:
+            # lifecycle spans as one deferred column batch, in the same
+            # completion order the host engine emits them
+            obs.span_arrays(
+                [f"{node_names[j]}@{j}" for j in p_j[ord_p]],
+                rid_o, [tasks[r].name for r in rid_o],
+                arrivals[rid_o], p_start[ord_p], fin_real[ord_p],
+                transfer_s=None if rtt_draws is None
+                else rtt_draws[ord_p])
     return telemetry

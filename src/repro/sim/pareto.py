@@ -38,6 +38,7 @@ from repro.core import costs as co
 from repro.core.decisions import make_envs
 from repro.core.offload import LayerCost
 from repro.hw import DeviceSpec, get_device
+from repro.obs.trace import NULL_TRACER
 from repro.sim.telemetry import Telemetry
 
 #: default objective subset the domination test runs on (deadline slack
@@ -89,6 +90,7 @@ class ParetoStreamScheduler:
         self.link_latency_s = link_latency_s
         self.verify = verify
         self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.obs = NULL_TRACER                   # set by simulate_stream
         self.live: dict[int, SplitState] = {}
         self.total_repicks = 0
         self.total_switches = 0
@@ -210,6 +212,11 @@ class ParetoStreamScheduler:
                 st.front_size = int(front[k].sum())
                 new = int(picks[k])
                 if new != st.pick:
+                    if self.obs.enabled:
+                        self.obs.instant(
+                            "split_planner", "split_repick", float(now),
+                            tid=st.rid,
+                            args={"from": st.pick, "to": new})
                     st.pick = new
                     st.switches += 1
                     st.history.append((float(now), new))

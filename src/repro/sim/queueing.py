@@ -39,6 +39,8 @@ from typing import Optional, Sequence, Union
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 Seed = Union[int, np.random.SeedSequence]
 
 __all__ = [
@@ -203,6 +205,7 @@ class NodePools:
 
     def __init__(self, pools: Sequence[ServerPool]) -> None:
         self.pools = list(pools)
+        self.obs = NULL_TRACER                   # set by simulate_stream
         self.avail = np.array([p.next_free() for p in self.pools],
                               dtype=np.float64)
 
@@ -225,6 +228,9 @@ class NodePools:
               service_s: float) -> tuple[float, float]:
         start, finish = self.pools[j].admit(now, service_s)
         self.avail[j] = self.pools[j].next_free()
+        if self.obs.enabled and start > now:
+            self.obs.instant(f"pool@{j}", "pool_wait", float(now),
+                             args={"wait_s": start - now})
         return start, finish
 
     def recompute_avail(self) -> np.ndarray:

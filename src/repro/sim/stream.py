@@ -33,6 +33,7 @@ from typing import Callable, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import scheduler as sch
+from repro.obs.trace import NULL_TRACER
 from repro.sim.events import EventQueue
 from repro.sim.state import ClusterLinks, DriftingEnv
 from repro.sim.telemetry import TaskRecord, Telemetry
@@ -286,6 +287,7 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                     pools=None, rtt=None,
                     saturation_threshold: Optional[float] = None,
                     telemetry: Optional[Telemetry] = None,
+                    obs=None,
                     engine: str = "event") -> Telemetry:
     """Run the full event-driven streaming simulation.
 
@@ -357,6 +359,14 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
     crosses the threshold from below — tail-aware re-picks exactly when
     contention bites.
 
+    ``obs=`` (a :class:`repro.obs.Tracer`) records the run as structured
+    spans and instants in *virtual time*: one ``sojourn ⊃ queue_wait ·
+    service · transfer`` lifecycle per task on its node's track, plus
+    instants for replans, split re-picks, pool saturation, drift
+    triggers, and oracle refits.  The default no-op tracer costs
+    nothing, and a live tracer only observes values the loop already
+    computes — traced runs are bit-for-bit identical to untraced ones.
+
     ``engine="fleet"`` dispatches the whole run to
     :func:`repro.sim.fleet.simulate_fleet`, the time-slabbed array-native
     twin of this loop — bit-for-bit equal telemetry in f64, orders of
@@ -376,7 +386,7 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
             split_cost=split_cost, split_backend=split_backend,
             rebalance=rebalance, pools=pools, rtt=rtt,
             saturation_threshold=saturation_threshold,
-            telemetry=telemetry)
+            telemetry=telemetry, obs=obs)
     if engine != "event":
         raise ValueError(f"unknown engine {engine!r}; "
                          "use 'event' or 'fleet'")
@@ -386,6 +396,9 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                          "and pools= (it re-picks splits when pool "
                          "utilisation crosses the threshold)")
     telemetry = telemetry if telemetry is not None else Telemetry()
+    obs = obs if obs is not None else NULL_TRACER
+    if pools is not None:
+        pools.obs = obs
     if oracle is not None:
         if cost is not None:
             raise ValueError("pass either cost= or oracle= — the oracle "
@@ -393,6 +406,8 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                              "(oracle.cost_model())")
         cost = oracle.cost_model()
         oracle.telemetry = telemetry           # counters/gauges per run
+        oracle.obs = obs                       # drift/refit instants
+        oracle.registry.obs = obs              # publish instants
     if split_planner is not None:
         if split_env is None or split_layers is None:
             raise ValueError("split_planner needs split_env= and "
@@ -403,6 +418,7 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                              "decide-at-admission path (no "
                              "split_planner)")
         split_planner.telemetry = telemetry    # one record per run
+        split_planner.obs = obs                # split re-pick instants
     decide_splits = (split_planner is None and split_env is not None
                      and split_layers is not None)
     if split_cost is not None and not decide_splits:
@@ -475,6 +491,9 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                 slots.setdefault(id(task), []).append(rid)
             placed = sched.on_arrivals(batch, now)
             to_arrive -= len(batch)
+            if obs.enabled:
+                obs.instant("scheduler", "replan", now,
+                            args={"batch": len(batch)})
             for a in placed:
                 rid = slots[id(a.task)].pop(0)
                 live[rid] = a
@@ -497,6 +516,10 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                 sat_now = bool(pools.saturated(
                     now, saturation_threshold).any()) if now > 0 else False
                 if sat_now and not sat_was:
+                    if obs.enabled:
+                        obs.instant("scheduler", "pool_saturation", now,
+                                    args={"threshold":
+                                          saturation_threshold})
                     split_planner.on_saturation(split_env.link_bw, now=now)
                 sat_was = sat_now
         elif ev.kind == "finish":
@@ -530,6 +553,12 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
                 * sched.nodes[j].spec.tdp_watts,
                 split=split, switches=switches,
                 transfer_s=rtt_of.get(id(a), 0.0)))
+            if obs.enabled:
+                obs.task_spans(
+                    f"{a.node}@{j}", rid, a.task.name,
+                    float(arrivals[rid]), a.start, now,
+                    transfer_s=rtt_of.get(id(a), 0.0),
+                    args=None if split is None else {"split": split})
             del live[rid]
             migrated = sched.on_node_free(j, now)
             if migrated is not None:
@@ -538,8 +567,12 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
             if links is not None:
                 prev = links.values()
                 bws = links.step(link_update_dt)
-                for j in np.flatnonzero(bws != prev):
+                changed = np.flatnonzero(bws != prev)
+                for j in changed:
                     sched.set_link_bw(int(j), float(bws[j]))
+                if obs.enabled and len(changed):
+                    obs.instant("scheduler", "link_drift", now,
+                                args={"nodes": int(len(changed))})
             if split_env is not None:
                 split_env.step(link_update_dt)
                 if split_planner is not None:

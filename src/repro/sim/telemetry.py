@@ -153,63 +153,68 @@ class Telemetry:
     def energy_j(self) -> float:
         return float(sum(r.energy_j for r in self.records))
 
-    def cvar(self, alpha: float = 0.95) -> float:
-        """CVaR_alpha of task sojourn times: the mean sojourn over the
-        worst ``(1 - alpha)`` fraction of tasks — the tail statistic
-        the tail-aware cost objective optimises for."""
+    @staticmethod
+    def _cvar_of(soj: np.ndarray, alpha: float) -> float:
         if not 0.0 < alpha < 1.0:
             raise ValueError(f"alpha must be in (0, 1), got {alpha}")
-        soj = np.asarray([r.sojourn_s for r in self.records], np.float64)
         if soj.size == 0:
             return 0.0
         var = np.percentile(soj, 100.0 * alpha)
         tail = soj[soj >= var]
         return float(tail.mean()) if tail.size else float(var)
 
-    def queue_lens(self) -> dict[str, float]:
-        """Per-node time-averaged queue length over the makespan
-        (Little's law: total queueing delay accrued on the node divided
-        by the run's span).  Node labels match :meth:`utilisation`."""
-        span = self.makespan_s
-        waits: Counter = Counter()
-        for r in self.records:
-            if r.node:
-                waits[(r.node_id, r.node)] += r.wait_s
-        names = Counter(name for _, name in waits)
-        out = {}
-        for nid, name in sorted(waits, key=lambda k: (str(k[1]),
-                                                      -1 if k[0] is None
-                                                      else k[0])):
-            label = name if names[name] == 1 or nid is None \
-                else f"{name}@{nid}"
-            out[label] = waits[(nid, name)] / span if span > 0 else 0.0
-        return out
+    def cvar(self, alpha: float = 0.95) -> float:
+        """CVaR_alpha of task sojourn times: the mean sojourn over the
+        worst ``(1 - alpha)`` fraction of tasks — the tail statistic
+        the tail-aware cost objective optimises for."""
+        soj = np.asarray([r.sojourn_s for r in self.records], np.float64)
+        return self._cvar_of(soj, alpha)
 
-    def utilisation(self) -> dict[str, float]:
-        """Busy fraction per node over the run's makespan.
+    def _node_stats(self) -> tuple[dict[str, float], dict[str, float]]:
+        """One walk over the records producing both per-node reductions:
+        ``(utilisation, mean queue length)`` — busy time and accrued
+        queueing delay per node, each divided by the run's makespan.
 
         Nodes are identified by ``(node_id, node)`` so same-spec nodes
         do not merge; duplicates are labelled ``name@id``."""
         span = self.makespan_s
         busy: Counter = Counter()
+        waits: Counter = Counter()
         for r in self.records:
             if r.node:
                 busy[(r.node_id, r.node)] += r.finished_s - r.started_s
+                waits[(r.node_id, r.node)] += r.wait_s
         names = Counter(name for _, name in busy)
-        out = {}
+        util: dict[str, float] = {}
+        qlen: dict[str, float] = {}
         for nid, name in sorted(busy, key=lambda k: (str(k[1]),
                                                      -1 if k[0] is None
                                                      else k[0])):
             label = name if names[name] == 1 or nid is None \
                 else f"{name}@{nid}"
-            out[label] = busy[(nid, name)] / span if span > 0 else 0.0
-        return out
+            util[label] = busy[(nid, name)] / span if span > 0 else 0.0
+            qlen[label] = waits[(nid, name)] / span if span > 0 else 0.0
+        return util, qlen
 
-    def summary(self) -> dict:
-        """Run-level metrics (the numbers a paper table would report)."""
+    def queue_lens(self) -> dict[str, float]:
+        """Per-node time-averaged queue length over the makespan
+        (Little's law: total queueing delay accrued on the node divided
+        by the run's span).  Node labels match :meth:`utilisation`."""
+        return self._node_stats()[1]
+
+    def utilisation(self) -> dict[str, float]:
+        """Busy fraction per node over the run's makespan (labels as in
+        :meth:`_node_stats`)."""
+        return self._node_stats()[0]
+
+    def summary(self, *, _util: Optional[dict] = None) -> dict:
+        """Run-level metrics (the numbers a paper table would report).
+
+        ``_util`` lets :meth:`to_rows` pass a precomputed utilisation
+        dict so the records are walked once, not once per reduction."""
         soj = np.asarray([r.sojourn_s for r in self.records], np.float64)
         waits = np.asarray([r.wait_s for r in self.records], np.float64)
-        util = self.utilisation()
+        util = self.utilisation() if _util is None else _util
         span = self.makespan_s
         out = {
             "n_tasks": len(self.records),
@@ -217,6 +222,8 @@ class Telemetry:
             if soj.size else 0.0,
             "p99_completion_s": float(np.percentile(soj, 99))
             if soj.size else 0.0,
+            # the tail statistic the tail-aware cost objective optimises
+            "cvar95_completion_s": self._cvar_of(soj, 0.95),
             "mean_completion_s": float(soj.mean()) if soj.size else 0.0,
             "makespan_s": self.makespan_s,
             "deadline_misses": self.deadline_misses,
@@ -247,13 +254,52 @@ class Telemetry:
     def to_rows(self, name: str = "sim_stream") -> list[dict]:
         """Flat benchmark-style rows: one summary row plus one row per
         node's utilisation — the same ``[{"name": ..., ...}]`` shape as
-        the ``results/bench_*.json`` files."""
-        rows = [{"name": name, **self.summary()}]
-        qlen = self.queue_lens()
+        the ``results/bench_*.json`` files.  Both per-node reductions
+        come from one record walk (:meth:`_node_stats`), reused by the
+        summary row."""
+        util, qlen = self._node_stats()
+        rows = [{"name": name, **self.summary(_util=util)}]
         rows += [{"name": f"{name}_util_{node}", "utilisation": u,
                   "mean_queue_len": qlen.get(node, 0.0)}
-                 for node, u in self.utilisation().items()]
+                 for node, u in util.items()]
         return rows
+
+    # -- export (the repro.obs metrics surface) ---------------------------
+    def registry(self, prefix: str = "sim") -> "MetricsRegistry":
+        """Lift this run into a :class:`repro.obs.MetricsRegistry`:
+        every scheduler counter becomes a Prometheus counter, every
+        gauge a gauge, and the sojourn/wait/transfer distributions land
+        in fixed-boundary histograms — the standard metrics surface a
+        serving plane scrapes (``to_prometheus`` dumps the text
+        exposition format)."""
+        from repro.obs import MetricsRegistry
+        reg = MetricsRegistry()
+        reg.counter(f"{prefix}_tasks_completed_total",
+                    help="completed tasks").inc(len(self.records))
+        reg.counter(f"{prefix}_deadline_misses_total",
+                    help="tasks finishing past their deadline") \
+            .inc(self.deadline_misses)
+        reg.gauge(f"{prefix}_energy_joules",
+                  help="total energy over the run").set(self.energy_j)
+        reg.gauge(f"{prefix}_makespan_seconds").set(self.makespan_s)
+        for key in sorted(self.counters):
+            reg.counter(f"{prefix}_{key}_total").inc(self.counters[key])
+        for key in sorted(self.gauges):
+            reg.gauge(f"{prefix}_{key}").set(self.gauges[key])
+        hists = {
+            "sojourn_seconds": [r.sojourn_s for r in self.records],
+            "wait_seconds": [r.wait_s for r in self.records],
+            "transfer_seconds": [r.transfer_s for r in self.records],
+        }
+        for key, vals in hists.items():
+            h = reg.histogram(f"{prefix}_task_{key}",
+                              help=f"per-task {key.split('_')[0]} time")
+            h.observe_many(vals)
+        return reg
+
+    def to_prometheus(self, prefix: str = "sim") -> str:
+        """Prometheus text exposition of :meth:`registry`."""
+        return self.registry(prefix).to_prometheus()
 
     def save(self, path: str, name: str = "sim_stream") -> None:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
