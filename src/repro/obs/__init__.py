@@ -24,17 +24,37 @@ ones and every engine-equivalence pin holds with tracing on
 
 Export: :func:`export_chrome` writes Chrome trace-event JSON loadable
 in Perfetto; :func:`validate_chrome` is the span-pairing checker;
-``Tracer.last(n)`` is the bounded flight recorder for post-mortems.
-See ``docs/observability.md``.
+``Tracer.last(n)`` is the bounded flight recorder for post-mortems
+(:func:`postmortem_dump` writes it out when an engine crashes).
+
+The consumption layer lives one package down in :mod:`repro.obs.
+analyze`: phase attribution and deadline-miss classification
+(:func:`~repro.obs.analyze.attribute`), differential profiling
+(:func:`~repro.obs.analyze.diff`), mergeable streaming quantiles
+(:class:`QuantileSketch`, also a registry kind via
+``MetricsRegistry.quantile``), and the ``regress`` CI gate
+(``python -m repro.obs.analyze``).  See ``docs/observability.md``.
 """
 from repro.obs.chrome import export_chrome, validate_chrome
 from repro.obs.metrics import (LATENCY_BOUNDARIES, Counter, Gauge,
                                Histogram, MetricsRegistry)
 from repro.obs.trace import (NULL_TRACER, InstantEvent, NullTracer,
-                             SpanEvent, Tracer)
+                             SpanEvent, Tracer, postmortem_dump)
 
 __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER", "SpanEvent", "InstantEvent",
     "MetricsRegistry", "Counter", "Gauge", "Histogram",
     "LATENCY_BOUNDARIES", "export_chrome", "validate_chrome",
+    "postmortem_dump", "QuantileSketch",
 ]
+
+
+def __getattr__(name):
+    # QuantileSketch lives in the analyze layer above metrics; a lazy
+    # attribute keeps `from repro.obs import QuantileSketch` working
+    # without repro.obs importing its own consumption layer eagerly
+    if name == "QuantileSketch":
+        from repro.obs.analyze.sketch import QuantileSketch
+        return QuantileSketch
+    raise AttributeError(f"module {__name__!r} has no attribute "
+                         f"{name!r}")

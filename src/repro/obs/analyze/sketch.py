@@ -1,0 +1,219 @@
+"""Mergeable fixed-centroid streaming quantile sketch.
+
+The serving plane needs *live* rolling p50/p99 sojourn without storing
+every sample — the seam the ROADMAP's load-shedding and autoscaling
+items read.  :class:`QuantileSketch` is a bounded-memory streaming
+histogram in the Ben-Haim–Tom-Tov style (P²'s fixed-marker idea
+generalised to many markers): it keeps at most ``max_centroids``
+weighted centroids ``(value, weight)``; a new observation lands as a
+weight-1 centroid, and when the budget overflows the two *closest*
+adjacent centroids merge into their weighted mean.  Closest-gap merging
+collapses dense regions first, so sparse tails keep near-singleton
+centroids — which is what makes tail quantiles (p99) accurate at a few
+hundred centroids.
+
+Properties the tests pin (``tests/test_obs_analyze.py``):
+
+  * **bounded**: never more than ``max_centroids`` centroids, O(1)
+    memory regardless of stream length;
+  * **accurate**: p99 within 2% relative error of the exact
+    ``np.percentile`` on ≥10⁴-sample streams (uniform / lognormal /
+    exponential mixes);
+  * **mergeable**: ``merge(other)`` folds another sketch in —
+    ``sketch(a) ⊕ sketch(b) ≈ sketch(a ++ b)`` — the multi-replica
+    roll-up the serving tier needs;
+  * **exact when small**: with fewer observations than centroids the
+    sketch holds every sample and quantiles interpolate the exact
+    order statistics.
+
+The class doubles as a :class:`repro.obs.MetricsRegistry` metric kind
+(``kind = "summary"``): ``MetricsRegistry.quantile(name)`` registers
+one, and it renders in the Prometheus text exposition as a summary
+series (``name{quantile="0.99"} ...`` plus ``_sum``/``_count``).
+Only numpy is used; no third-party deps.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+__all__ = ["QuantileSketch", "DEFAULT_QUANTILES"]
+
+#: quantiles exposed in the Prometheus summary series
+DEFAULT_QUANTILES = (0.5, 0.9, 0.99)
+
+#: how many raw samples to buffer before a compaction pass — bounds the
+#: per-compaction cost while amortising the argmin loop over many inserts
+_CHUNK = 2048
+
+
+class QuantileSketch:
+    """Fixed-budget mergeable quantile sketch (see module docstring).
+
+    ``max_centroids`` trades memory for accuracy: 128 centroids hold
+    p99 of 10⁴-sample latency streams within ~1% in practice (2% is the
+    tested bound).  ``quantiles`` only selects which points the
+    Prometheus exposition prints; :meth:`quantile` answers any q.
+    """
+
+    kind = "summary"
+
+    def __init__(self, name: str = "", *, max_centroids: int = 128,
+                 quantiles: Sequence[float] = DEFAULT_QUANTILES,
+                 help: str = ""):
+        if max_centroids < 8:
+            raise ValueError(f"max_centroids must be >= 8, got "
+                             f"{max_centroids}")
+        self.name = name
+        self.help = help
+        self.max_centroids = int(max_centroids)
+        self.quantiles = tuple(float(q) for q in quantiles)
+        self._v = np.empty(0, np.float64)        # centroid values, sorted
+        self._w = np.empty(0, np.float64)        # centroid weights
+        self._buf: list[np.ndarray] = []         # uncompacted raw samples
+        self._buffered = 0
+        self.count = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    # -- ingestion --------------------------------------------------------
+    def observe(self, v: float) -> None:
+        self.observe_many([v])
+
+    def observe_many(self, values) -> None:
+        v = np.asarray(values, np.float64).ravel()
+        if v.size == 0:
+            return
+        if not np.isfinite(v).all():
+            raise ValueError(f"sketch {self.name or '<anon>'}: "
+                             f"non-finite observation")
+        self.count += int(v.size)
+        self.sum += float(v.sum())
+        self.min = min(self.min, float(v.min()))
+        self.max = max(self.max, float(v.max()))
+        self._buf.append(v)
+        self._buffered += int(v.size)
+        if self._buffered >= _CHUNK:
+            self._compact()
+
+    def merge(self, other: "QuantileSketch") -> "QuantileSketch":
+        """Fold ``other`` into this sketch (the multi-replica roll-up).
+        Centroid budgets need not match; this sketch keeps its own."""
+        if other.count == 0:
+            return self
+        other._compact()
+        self._compact()
+        self._v = np.concatenate([self._v, other._v])
+        self._w = np.concatenate([self._w, other._w])
+        order = np.argsort(self._v, kind="stable")
+        self._v, self._w = self._v[order], self._w[order]
+        self._shrink()
+        self.count += other.count
+        self.sum += other.sum
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        return self
+
+    # -- compaction -------------------------------------------------------
+    def _compact(self) -> None:
+        if not self._buf:
+            return
+        fresh = np.concatenate(self._buf)
+        self._buf, self._buffered = [], 0
+        self._v = np.concatenate([self._v, fresh])
+        self._w = np.concatenate([self._w, np.ones(fresh.size)])
+        order = np.argsort(self._v, kind="stable")
+        self._v, self._w = self._v[order], self._w[order]
+        self._shrink()
+
+    def _shrink(self) -> None:
+        """Merge closest-gap adjacent centroid pairs until the budget
+        holds.  One pair per step keeps the estimator monotone; dense
+        regions collapse first, sparse tails survive as singletons."""
+        v, w = self._v, self._w
+        while v.size > self.max_centroids:
+            gaps = np.diff(v)
+            k = int(np.argmin(gaps))
+            wm = w[k] + w[k + 1]
+            vm = (v[k] * w[k] + v[k + 1] * w[k + 1]) / wm
+            v = np.concatenate([v[:k], [vm], v[k + 2:]])
+            w = np.concatenate([w[:k], [wm], w[k + 2:]])
+        self._v, self._w = v, w
+
+    @property
+    def n_centroids(self) -> int:
+        self._compact()
+        return int(self._v.size)
+
+    # -- queries ----------------------------------------------------------
+    def quantile(self, q: float) -> float:
+        """Estimate the q-quantile.  Centroids are treated as mass
+        points at their mean with cumulative rank ``W_{<i} + w_i/2``
+        (the Ben-Haim–Tom-Tov sum rule); the answer linearly
+        interpolates between bracketing centroids, clamped to the exact
+        observed ``[min, max]``."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"q must be in [0, 1], got {q}")
+        self._compact()
+        if self.count == 0:
+            return 0.0
+        v, w = self._v, self._w
+        if v.size == 1:
+            return float(v[0])
+        # centroid i sits at cumulative rank (fraction of total mass)
+        ranks = (np.cumsum(w) - 0.5 * w) / self.count
+        t = q
+        if t <= ranks[0]:
+            # below the first centroid: interpolate from the exact min
+            f = t / ranks[0] if ranks[0] > 0 else 1.0
+            return float(self.min + f * (v[0] - self.min))
+        if t >= ranks[-1]:
+            span = 1.0 - ranks[-1]
+            f = (t - ranks[-1]) / span if span > 0 else 1.0
+            return float(v[-1] + f * (self.max - v[-1]))
+        k = int(np.searchsorted(ranks, t, side="right")) - 1
+        f = (t - ranks[k]) / (ranks[k + 1] - ranks[k])
+        return float(v[k] + f * (v[k + 1] - v[k]))
+
+    def quantiles_dict(self) -> dict[str, float]:
+        """The exposed quantile points as ``{"0.5": ..., ...}``."""
+        return {repr(q).rstrip("0").rstrip(".") or "0": self.quantile(q)
+                for q in self.quantiles}
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def __len__(self) -> int:
+        return self.count
+
+    # -- Prometheus metric-kind surface -----------------------------------
+    def expose(self) -> list[str]:
+        """Prometheus summary series: one sample per exposed quantile
+        plus ``_sum`` / ``_count`` (matches the text-exposition format
+        :meth:`repro.obs.MetricsRegistry.to_prometheus` renders)."""
+        from repro.obs.metrics import _fmt
+        out = []
+        for q in self.quantiles:
+            label = repr(float(q))
+            out.append(f'{self.name}{{quantile="{label}"}} '
+                       f"{_fmt(self.quantile(q))}")
+        out.append(f"{self.name}_sum {_fmt(self.sum)}")
+        out.append(f"{self.name}_count {self.count}")
+        return out
+
+    def to_row(self, prefix: str = "") -> dict:
+        """One ``results/``-schema record row for this sketch."""
+        self._compact()
+        return {
+            "name": f"{prefix}quantiles_{self.name}" if prefix or self.name
+            else "quantiles",
+            "quantiles": {str(q): self.quantile(q)
+                          for q in self.quantiles},
+            "count": self.count, "sum": self.sum,
+            "min": self.min if self.count else 0.0,
+            "max": self.max if self.count else 0.0,
+            "n_centroids": int(self._v.size),
+        }

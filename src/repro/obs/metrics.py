@@ -9,7 +9,7 @@ structured superset of the ad-hoc ``Counter``/``gauges`` dicts
 sojourn/wait/transfer distributions into one, and
 ``Telemetry.to_prometheus()`` dumps it).
 
-Three metric kinds, deliberately matching the Prometheus data model:
+Four metric kinds, deliberately matching the Prometheus data model:
 
 ``Counter``
     monotone float total (``inc``); exposed as ``# TYPE ... counter``.
@@ -19,7 +19,13 @@ Three metric kinds, deliberately matching the Prometheus data model:
     fixed-boundary cumulative-bucket histogram (``observe`` /
     ``observe_many``); boundaries are chosen at construction —
     :data:`LATENCY_BOUNDARIES` covers the sojourn/wait/transfer scales
-    the simulators produce — so merging and scraping never re-bins.
+    the simulators produce — so :meth:`Histogram.merge` and scraping
+    never re-bin.
+``summary``
+    a live :class:`repro.obs.analyze.QuantileSketch`
+    (:meth:`MetricsRegistry.quantile`): mergeable fixed-centroid
+    streaming quantiles — rolling p50/p99 without stored samples,
+    exposed as a Prometheus summary series.
 
 :meth:`MetricsRegistry.to_prometheus` renders the text exposition
 format (``HELP``/``TYPE`` comments, ``_bucket``/``_sum``/``_count``
@@ -117,6 +123,7 @@ class Histogram:
         self.counts = np.zeros(len(b) + 1, np.int64)  # [+Inf] last
         self.sum = 0.0
         self.count = 0
+        self.observed_max = float("-inf")
 
     def observe(self, v: float) -> None:
         self.observe_many([v])
@@ -130,19 +137,43 @@ class Histogram:
         self.counts += np.bincount(idx, minlength=len(self.counts))
         self.sum += float(v.sum())
         self.count += int(v.size)
+        self.observed_max = max(self.observed_max, float(v.max()))
 
     def percentile_bound(self, q: float) -> float:
-        """Upper boundary of the bucket containing the q-quantile —
-        what a scraper can recover without raw samples (inf when the
-        quantile falls in the +Inf bucket)."""
+        """Upper bound on the q-quantile recoverable without raw
+        samples: the upper boundary of the bucket the quantile falls
+        in.  Always *finite*: when the quantile lands in the ``+Inf``
+        bucket the exact observed maximum is returned instead (a
+        histogram that answered ``inf`` is useless to an autoscaler).
+        ``q`` below the observed mass clamps to the bucket holding the
+        smallest observation (``q=0`` → the first non-empty bucket's
+        bound), ``q=1`` to the one holding the largest."""
         if not 0.0 <= q <= 1.0:
             raise ValueError(f"q must be in [0, 1], got {q}")
         if self.count == 0:
             return 0.0
         cum = np.cumsum(self.counts)
-        k = int(np.searchsorted(cum, q * self.count, side="left"))
+        # clamp the target rank into [1, count]: ranks below one
+        # observation resolve to the first observation's bucket
+        target = min(max(q * self.count, 1.0), float(self.count))
+        k = int(np.searchsorted(cum, target, side="left"))
         return self.boundaries[k] if k < len(self.boundaries) \
-            else float("inf")
+            else self.observed_max
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold a same-boundary histogram in (the multi-replica
+        roll-up: fixed boundaries mean merging never re-bins)."""
+        if not isinstance(other, Histogram) \
+                or other.boundaries != self.boundaries:
+            raise ValueError(
+                f"histogram {self.name!r}: can only merge a histogram "
+                f"with identical boundaries (got "
+                f"{getattr(other, 'boundaries', type(other))})")
+        self.counts += other.counts
+        self.sum += other.sum
+        self.count += other.count
+        self.observed_max = max(self.observed_max, other.observed_max)
+        return self
 
     def expose(self) -> list[str]:
         out = []
@@ -201,6 +232,27 @@ class MetricsRegistry:
                              f"with boundaries {m.boundaries}")
         return m
 
+    def quantile(self, name: str, *, max_centroids: int = 128,
+                 quantiles: Sequence[float] = (0.5, 0.9, 0.99),
+                 help: str = ""):
+        """Get-or-create a live :class:`repro.obs.analyze.
+        QuantileSketch` (Prometheus ``summary`` kind): a mergeable
+        fixed-centroid sketch answering rolling p50/p99 without storing
+        samples — what the serving engines expose live sojourn tails
+        through."""
+        # deferred: the sketch lives in the analyze layer above this one
+        from repro.obs.analyze.sketch import QuantileSketch
+        m = self._get(name, "summary")
+        if m is None:
+            m = self._metrics[name] = QuantileSketch(
+                name, max_centroids=max_centroids, quantiles=quantiles,
+                help=help)
+        elif m.max_centroids != int(max_centroids):
+            raise ValueError(f"quantile sketch {name!r} already "
+                             f"registered with max_centroids="
+                             f"{m.max_centroids}")
+        return m
+
     def __len__(self) -> int:
         return len(self._metrics)
 
@@ -232,14 +284,20 @@ class MetricsRegistry:
         rows = [{"name": name, **dict(sorted(scalars.items()))}]
         for hname in sorted(self._metrics):
             m = self._metrics[hname]
-            if m.kind != "histogram":
-                continue
-            rows.append({
-                "name": f"{name}_hist_{hname}",
-                "boundaries": list(m.boundaries),
-                "counts": [int(c) for c in m.counts],
-                "sum": m.sum, "count": m.count,
-            })
+            if m.kind == "histogram":
+                rows.append({
+                    "name": f"{name}_hist_{hname}",
+                    "boundaries": list(m.boundaries),
+                    "counts": [int(c) for c in m.counts],
+                    "sum": m.sum, "count": m.count,
+                })
+            elif m.kind == "summary":
+                rows.append({
+                    "name": f"{name}_quantiles_{hname}",
+                    "quantiles": {str(q): m.quantile(q)
+                                  for q in m.quantiles},
+                    "sum": m.sum, "count": m.count,
+                })
         return rows
 
     def save(self, path: str, name: str = "metrics") -> None:

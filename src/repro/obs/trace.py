@@ -47,7 +47,7 @@ from collections import deque
 from typing import Optional, Sequence
 
 __all__ = ["SpanEvent", "InstantEvent", "NullTracer", "Tracer",
-           "NULL_TRACER"]
+           "NULL_TRACER", "postmortem_dump"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,7 +108,8 @@ class NullTracer:
         pass
 
     def span_arrays(self, tracks, tids, names, arrived_s, started_s,
-                    finished_s, *, transfer_s=None) -> None:
+                    finished_s, *, transfer_s=None,
+                    args_cols=None) -> None:
         pass
 
     def instant_arrays(self, track, name, ts, *, tid: int = 0,
@@ -203,11 +204,15 @@ class Tracer(NullTracer):
     # -- ingestion: the fleet engine's slab path --------------------------
     def span_arrays(self, tracks: Sequence[str], tids, names,
                     arrived_s, started_s, finished_s, *,
-                    transfer_s=None) -> None:
+                    transfer_s=None, args_cols=None) -> None:
         """Batched :meth:`task_spans`: parallel columns (all length n)
         for one slab of completed tasks, deferred — equivalent to n
         ``task_spans`` calls in column order, but the hot loop only pays
-        one tuple append (mirrors ``Telemetry.complete_arrays``)."""
+        one tuple append (mirrors ``Telemetry.complete_arrays``).
+
+        ``args_cols`` maps arg key -> a parallel column stamped onto
+        each row's ``sojourn`` span (``deadline_s``, ``split``, ...);
+        ``None`` entries in a column mean "no such arg for this row"."""
         n = len(names)
         for label, col in (("tracks", tracks), ("tids", tids),
                            ("arrived_s", arrived_s),
@@ -219,9 +224,13 @@ class Tracer(NullTracer):
         if transfer_s is not None and len(transfer_s) != n:
             raise ValueError(f"column transfer_s has {len(transfer_s)} "
                              f"rows, expected {n}")
+        for key, col in (args_cols or {}).items():
+            if len(col) != n:
+                raise ValueError(f"args column {key!r} has {len(col)} "
+                                 f"rows, expected {n}")
         self._pending.append(("spans", list(tracks), tids, list(names),
                               arrived_s, started_s, finished_s,
-                              transfer_s))
+                              transfer_s, args_cols))
 
     def instant_arrays(self, track: str, name: str, ts, *, tid: int = 0,
                        args_cols: Optional[dict] = None) -> None:
@@ -242,14 +251,22 @@ class Tracer(NullTracer):
         for batch in batches:
             if batch[0] == "spans":
                 (_, tracks, tids, names, arrived, started, finished,
-                 transfer) = batch
+                 transfer, args_cols) = batch
                 for k in range(len(names)):
+                    args = None
+                    if args_cols is not None:
+                        args = {key: col[k].item()
+                                if hasattr(col[k], "item") else col[k]
+                                for key, col in args_cols.items()
+                                if col[k] is not None}
+                        args = args or None
                     self.task_spans(
                         tracks[k], int(tids[k]), names[k],
                         float(arrived[k]), float(started[k]),
                         float(finished[k]),
                         transfer_s=0.0 if transfer is None
-                        else float(transfer[k]))
+                        else float(transfer[k]),
+                        args=args)
             else:
                 _, track, name, ts, tid, args_cols = batch
                 for k in range(len(ts)):
@@ -294,3 +311,34 @@ class Tracer(NullTracer):
         matched B/E pairs with children nested inside parents."""
         from repro.obs.chrome import export_chrome
         return export_chrome(self, path)
+
+
+def postmortem_dump(tracer, *, clock_s: float, error: str = "",
+                    path: str = "results/postmortem.json",
+                    n: int = 64) -> Optional[dict]:
+    """Flight-recorder post-mortem: the last ``n`` traced events plus
+    the crashing clock reading, written to ``path`` and summarised on
+    stderr.  The engines call this from their crash handlers *before*
+    re-raising — with the :data:`NULL_TRACER` (tracing off) it is a
+    no-op, and any failure inside the dump itself is swallowed so a
+    broken disk never masks the original exception.  Returns the dump
+    dict (or None when disabled / failed)."""
+    if not getattr(tracer, "enabled", False):
+        return None
+    try:
+        import json
+        import os
+        import sys
+        events = [{"kind": type(ev).__name__, **dataclasses.asdict(ev)}
+                  for ev in tracer.last(n)]
+        dump = {"clock_s": float(clock_s), "error": str(error),
+                "n_events": len(events), "events": events}
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(dump, f, indent=1, default=float)
+        print(f"[repro.obs] post-mortem: {len(events)} flight-recorder "
+              f"events at t={clock_s:.6g}s -> {path}"
+              + (f" ({error})" if error else ""), file=sys.stderr)
+        return dump
+    except Exception:
+        return None

@@ -67,7 +67,8 @@ class ContinuousBatchEngine:
                  seed: int = 0, cost=None, link_bw=1.25e9,
                  offload_device=None, offload_edge=None,
                  decision_backend: str = "numpy",
-                 clock=None, step_latency_s: float = 5e-3, obs=None):
+                 clock=None, step_latency_s: float = 5e-3, obs=None,
+                 metrics=None):
         assert cfg.family in ("dense", "moe", "vlm") \
             and cfg.attn_kind == "gqa", \
             "continuous batching requires the vector-position GQA decode path"
@@ -89,6 +90,18 @@ class ContinuousBatchEngine:
         self.clock = clock
         self.step_latency_s = float(step_latency_s)
         self.obs = obs if obs is not None else NULL_TRACER
+        # live rolling quantiles: pass a repro.obs.MetricsRegistry and
+        # the engine streams per-request sojourn / queue-wait into
+        # mergeable sketches (summary kind) a /metrics scrape reads as
+        # p50/p90/p99 without stored samples
+        self.metrics = metrics
+        if metrics is not None:
+            self._q_sojourn = metrics.quantile(
+                "serve_sojourn_seconds",
+                help="request sojourn (arrival to completion)")
+            self._q_wait = metrics.quantile(
+                "serve_queue_wait_seconds",
+                help="request queue wait (arrival to admission)")
         self.replans = 0
         self.params = self.api.init_params(jax.random.key(seed))
         self.cache = self.api.init_cache(slots, max_len)
@@ -204,6 +217,13 @@ class ContinuousBatchEngine:
                         or self.slot_pos[s] >= self.max_len - 1:
                     done.append(req)
                     self.slot_req[s] = None
+                    if self.metrics is not None:
+                        self._q_sojourn.observe(
+                            self.clock.now - req.arrived_at)
+                        self._q_wait.observe(
+                            req.admitted_at - req.arrived_at)
+                        self.metrics.counter(
+                            "serve_requests_completed").inc()
                     if self.obs.enabled:
                         # virtual-clock lifecycle on the shared time axis:
                         # sojourn [arrived, now] ⊃ queue_wait [arrived,

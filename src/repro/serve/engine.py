@@ -68,7 +68,7 @@ class ServeEngine:
 
     def __init__(self, cfg, *, batch_size: int = 4, max_len: int = 256,
                  seed: int = 0, cost=None, decision_backend: str = "numpy",
-                 obs=None):
+                 obs=None, metrics=None):
         self.cfg = cfg
         self.api = build_model(cfg, impl="naive")
         self.batch_size = batch_size
@@ -76,6 +76,19 @@ class ServeEngine:
         self.cost = cost
         self.decision_backend = decision_backend
         self.obs = obs if obs is not None else NULL_TRACER
+        # live rolling quantiles: pass a repro.obs.MetricsRegistry and
+        # the engine streams per-batch first-token latency and
+        # per-request total latency into mergeable sketches (summary
+        # kind) — the scrape-time p50/p99 view, reusing the wall
+        # readings the stats block already measured
+        self.metrics = metrics
+        if metrics is not None:
+            self._q_first = metrics.quantile(
+                "serve_first_token_seconds",
+                help="time to first token per batch")
+            self._q_total = metrics.quantile(
+                "serve_request_total_seconds",
+                help="end-to-end request latency")
         self._batches = 0                # obs track row per batch
         self.params = self.api.init_params(jax.random.key(seed))
         self._prefill = jax.jit(
@@ -126,6 +139,8 @@ class ServeEngine:
         t_end = time.perf_counter()  # repro: disable=DET002 (measurement)
         self.stats.decode_s += t_end - t1
         self.stats.tokens_out += b * max_new
+        if self.metrics is not None:
+            self._q_first.observe(self.last_first_token_s)
         if self.obs.enabled:
             # the spans reuse the already-measured wall readings above —
             # tracing adds no perf_counter calls to the serving path
@@ -179,6 +194,10 @@ class ServeEngine:
                 r.total_s = dt
                 done.append(r)
                 self.stats.served += 1
+                if self.metrics is not None:
+                    self._q_total.observe(dt)
+                    self.metrics.counter(
+                        "serve_requests_completed").inc()
         return done
 
     # -- offload delegation -------------------------------------------------

@@ -708,11 +708,20 @@ def simulate_fleet(tasks: Sequence[sch.Task], arrivals,
             transfer_s=None if rtt_draws is None else rtt_draws[ord_p])
         if obs.enabled:
             # lifecycle spans as one deferred column batch, in the same
-            # completion order the host engine emits them
+            # completion order the host engine emits them; deadline and
+            # split ride as sojourn args so the analyze layer can
+            # classify misses (None entries drop per row)
+            args_cols = {
+                "deadline_s": [tasks[r].deadline_s for r in rid_o],
+                "split": None if split_by_rid is None
+                else [split_by_rid[r] for r in rid_o],
+            }
             obs.span_arrays(
                 [f"{node_names[j]}@{j}" for j in p_j[ord_p]],
                 rid_o, [tasks[r].name for r in rid_o],
                 arrivals[rid_o], p_start[ord_p], fin_real[ord_p],
                 transfer_s=None if rtt_draws is None
-                else rtt_draws[ord_p])
+                else rtt_draws[ord_p],
+                args_cols={k: v for k, v in args_cols.items()
+                           if v is not None})
     return telemetry

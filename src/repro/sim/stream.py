@@ -33,7 +33,7 @@ from typing import Callable, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import scheduler as sch
-from repro.obs.trace import NULL_TRACER
+from repro.obs.trace import NULL_TRACER, postmortem_dump
 from repro.sim.events import EventQueue
 from repro.sim.state import ClusterLinks, DriftingEnv
 from repro.sim.telemetry import TaskRecord, Telemetry
@@ -479,104 +479,118 @@ def simulate_stream(tasks: Sequence[sch.Task], arrivals,
         real_finish[id(a)] = t
         q.push(t, "finish", a)
 
-    while q:
-        ev = q.pop()
-        now = ev.time
-        if ev.kind == "arrive":
-            batch = [tasks[i] for i in ev.payload]
-            # map task objects back to their global indices (pick order
-            # of the placements differs from input order)
-            slots: dict[int, list[int]] = {}
-            for rid, task in zip(ev.payload, batch):
-                slots.setdefault(id(task), []).append(rid)
-            placed = sched.on_arrivals(batch, now)
-            to_arrive -= len(batch)
-            if obs.enabled:
-                obs.instant("scheduler", "replan", now,
-                            args={"batch": len(batch)})
-            for a in placed:
-                rid = slots[id(a.task)].pop(0)
-                live[rid] = a
-                rid_of[id(a)] = rid
-                schedule_finish(a)
+    now = 0.0
+    try:
+        while q:
+            ev = q.pop()
+            now = ev.time
+            if ev.kind == "arrive":
+                batch = [tasks[i] for i in ev.payload]
+                # map task objects back to their global indices (pick order
+                # of the placements differs from input order)
+                slots: dict[int, list[int]] = {}
+                for rid, task in zip(ev.payload, batch):
+                    slots.setdefault(id(task), []).append(rid)
+                placed = sched.on_arrivals(batch, now)
+                to_arrive -= len(batch)
+                if obs.enabled:
+                    obs.instant("scheduler", "replan", now,
+                                args={"batch": len(batch)})
+                for a in placed:
+                    rid = slots[id(a.task)].pop(0)
+                    live[rid] = a
+                    rid_of[id(a)] = rid
+                    schedule_finish(a)
+                    if split_planner is not None:
+                        split_planner.admit(
+                            rid, layers_for(a.task), split_env.link_bw,
+                            input_bytes=a.task.input_bytes, now=now,
+                            deadline_s=a.task.deadline_s)
+                    elif decide_splits:
+                        from repro.sim.fleet import _split_decide
+                        plan = _split_decide(
+                            layers_for(a.task),
+                            split_env.snapshot(a.task.input_bytes),
+                            split_cost, split_backend)
+                        split_of[rid] = int(plan.splits[0])
+                        telemetry.count("split_decides")
+                if saturation_threshold is not None:
+                    sat_now = bool(pools.saturated(
+                        now, saturation_threshold).any()) if now > 0 else False
+                    if sat_now and not sat_was:
+                        if obs.enabled:
+                            obs.instant("scheduler", "pool_saturation", now,
+                                        args={"threshold":
+                                              saturation_threshold})
+                        split_planner.on_saturation(split_env.link_bw, now=now)
+                    sat_was = sat_now
+            elif ev.kind == "finish":
+                a = ev.payload
+                if id(a) in completed or real_finish[id(a)] != now:
+                    continue                         # stale (migrated) event
+                completed.add(id(a))
+                rid = rid_of[id(a)]
+                j = sched.node_index(a)
+                if oracle is not None:
+                    # realised service time vs the exact ETC it was placed
+                    # with — the profiling-in-the-loop feedback edge.  The
+                    # placement-time spec keeps features/transfer consistent
+                    # with what the prediction actually saw.
+                    oracle.observe_task(a.task, spec_at_place[id(a)],
+                                        realised_s=now - a.start,
+                                        predicted_s=sched.etc_of(a), now=now,
+                                        extra_transfer_s=rtt_of.get(id(a), 0.0))
+                split, switches = None, 0
                 if split_planner is not None:
-                    split_planner.admit(
-                        rid, layers_for(a.task), split_env.link_bw,
-                        input_bytes=a.task.input_bytes, now=now,
-                        deadline_s=a.task.deadline_s)
+                    rec = split_planner.complete(rid, split_env.link_bw,
+                                                 now=now)
+                    split, switches = rec["pick"], rec["switches"]
                 elif decide_splits:
-                    from repro.sim.fleet import _split_decide
-                    plan = _split_decide(
-                        layers_for(a.task),
-                        split_env.snapshot(a.task.input_bytes),
-                        split_cost, split_backend)
-                    split_of[rid] = int(plan.splits[0])
-                    telemetry.count("split_decides")
-            if saturation_threshold is not None:
-                sat_now = bool(pools.saturated(
-                    now, saturation_threshold).any()) if now > 0 else False
-                if sat_now and not sat_was:
-                    if obs.enabled:
-                        obs.instant("scheduler", "pool_saturation", now,
-                                    args={"threshold":
-                                          saturation_threshold})
-                    split_planner.on_saturation(split_env.link_bw, now=now)
-                sat_was = sat_now
-        elif ev.kind == "finish":
-            a = ev.payload
-            if id(a) in completed or real_finish[id(a)] != now:
-                continue                         # stale (migrated) event
-            completed.add(id(a))
-            rid = rid_of[id(a)]
-            j = sched.node_index(a)
-            if oracle is not None:
-                # realised service time vs the exact ETC it was placed
-                # with — the profiling-in-the-loop feedback edge.  The
-                # placement-time spec keeps features/transfer consistent
-                # with what the prediction actually saw.
-                oracle.observe_task(a.task, spec_at_place[id(a)],
-                                    realised_s=now - a.start,
-                                    predicted_s=sched.etc_of(a), now=now,
-                                    extra_transfer_s=rtt_of.get(id(a), 0.0))
-            split, switches = None, 0
-            if split_planner is not None:
-                rec = split_planner.complete(rid, split_env.link_bw,
-                                             now=now)
-                split, switches = rec["pick"], rec["switches"]
-            elif decide_splits:
-                split = split_of.pop(rid)
-            telemetry.complete(TaskRecord(
-                name=a.task.name, arrived_s=float(arrivals[rid]),
-                started_s=a.start, finished_s=now, node=a.node,
-                node_id=j, deadline_s=a.task.deadline_s,
-                energy_j=(now - a.start)
-                * sched.nodes[j].spec.tdp_watts,
-                split=split, switches=switches,
-                transfer_s=rtt_of.get(id(a), 0.0)))
-            if obs.enabled:
-                obs.task_spans(
-                    f"{a.node}@{j}", rid, a.task.name,
-                    float(arrivals[rid]), a.start, now,
-                    transfer_s=rtt_of.get(id(a), 0.0),
-                    args=None if split is None else {"split": split})
-            del live[rid]
-            migrated = sched.on_node_free(j, now)
-            if migrated is not None:
-                schedule_finish(migrated)
-        elif ev.kind == "link":
-            if links is not None:
-                prev = links.values()
-                bws = links.step(link_update_dt)
-                changed = np.flatnonzero(bws != prev)
-                for j in changed:
-                    sched.set_link_bw(int(j), float(bws[j]))
-                if obs.enabled and len(changed):
-                    obs.instant("scheduler", "link_drift", now,
-                                args={"nodes": int(len(changed))})
-            if split_env is not None:
-                split_env.step(link_update_dt)
-                if split_planner is not None:
-                    split_planner.on_link(split_env.link_bw, now=now)
-            if to_arrive > 0 or live:
-                q.push(now + link_update_dt, "link", None)
+                    split = split_of.pop(rid)
+                telemetry.complete(TaskRecord(
+                    name=a.task.name, arrived_s=float(arrivals[rid]),
+                    started_s=a.start, finished_s=now, node=a.node,
+                    node_id=j, deadline_s=a.task.deadline_s,
+                    energy_j=(now - a.start)
+                    * sched.nodes[j].spec.tdp_watts,
+                    split=split, switches=switches,
+                    transfer_s=rtt_of.get(id(a), 0.0)))
+                if obs.enabled:
+                    span_args = {}
+                    if split is not None:
+                        span_args["split"] = split
+                    if a.task.deadline_s is not None:
+                        span_args["deadline_s"] = a.task.deadline_s
+                    obs.task_spans(
+                        f"{a.node}@{j}", rid, a.task.name,
+                        float(arrivals[rid]), a.start, now,
+                        transfer_s=rtt_of.get(id(a), 0.0),
+                        args=span_args or None)
+                del live[rid]
+                migrated = sched.on_node_free(j, now)
+                if migrated is not None:
+                    schedule_finish(migrated)
+            elif ev.kind == "link":
+                if links is not None:
+                    prev = links.values()
+                    bws = links.step(link_update_dt)
+                    changed = np.flatnonzero(bws != prev)
+                    for j in changed:
+                        sched.set_link_bw(int(j), float(bws[j]))
+                    if obs.enabled and len(changed):
+                        obs.instant("scheduler", "link_drift", now,
+                                    args={"nodes": int(len(changed))})
+                if split_env is not None:
+                    split_env.step(link_update_dt)
+                    if split_planner is not None:
+                        split_planner.on_link(split_env.link_bw, now=now)
+                if to_arrive > 0 or live:
+                    q.push(now + link_update_dt, "link", None)
+    except Exception as e:
+        # flight-recorder post-mortem: dump the recent traced
+        # history and the virtual clock before re-raising (no-op
+        # with tracing off; never masks the original exception)
+        postmortem_dump(obs, clock_s=now,
+                        error=f"{type(e).__name__}: {e}")
+        raise
     return telemetry

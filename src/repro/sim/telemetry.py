@@ -220,6 +220,8 @@ class Telemetry:
             "n_tasks": len(self.records),
             "p50_completion_s": float(np.percentile(soj, 50))
             if soj.size else 0.0,
+            "p90_completion_s": float(np.percentile(soj, 90))
+            if soj.size else 0.0,
             "p99_completion_s": float(np.percentile(soj, 99))
             if soj.size else 0.0,
             # the tail statistic the tail-aware cost objective optimises
@@ -227,6 +229,8 @@ class Telemetry:
             "mean_completion_s": float(soj.mean()) if soj.size else 0.0,
             "makespan_s": self.makespan_s,
             "deadline_misses": self.deadline_misses,
+            "miss_rate": self.deadline_misses / len(self.records)
+            if self.records else 0.0,
             "energy_j": self.energy_j,
             "mean_utilisation": float(np.mean(list(util.values())))
             if util else 0.0,
@@ -300,6 +304,17 @@ class Telemetry:
     def to_prometheus(self, prefix: str = "sim") -> str:
         """Prometheus text exposition of :meth:`registry`."""
         return self.registry(prefix).to_prometheus()
+
+    def attribution(self) -> "RunAttribution":
+        """The rows → analyze bridge: lift this run's task records into
+        a :class:`repro.obs.analyze.RunAttribution` (phase attribution,
+        critical paths, miss classification) without having traced the
+        run — lifecycle spans are reconstructed from the records.  A
+        traced run's ``attribute(tracer)`` additionally carries the
+        control-plane instants the miss classifier corroborates
+        against."""
+        from repro.obs.analyze import attribute
+        return attribute(self)
 
     def save(self, path: str, name: str = "sim_stream") -> None:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)

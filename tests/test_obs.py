@@ -306,7 +306,19 @@ def test_histogram_buckets_and_percentile():
     assert 'lat_seconds_bucket{le="2"} 3' in exp
     assert 'lat_seconds_bucket{le="+Inf"} 4' in exp
     assert h.percentile_bound(0.5) == 1.0
-    assert h.percentile_bound(1.0) == float("inf")
+    # the +Inf bucket answers with the exact observed max, never inf
+    assert h.percentile_bound(1.0) == 10.0
+    assert h.observed_max == 10.0
+    # q below the observed mass clamps to the first observation's bucket
+    assert h.percentile_bound(0.0) == 1.0
+    # same-boundary merge sums counts and keeps the max
+    h2 = Histogram("lat_seconds", boundaries=(1.0, 2.0, 5.0))
+    h2.observe_many([3.0, 20.0])
+    h.merge(h2)
+    assert h.counts.tolist() == [2, 1, 1, 2]
+    assert h.count == 6 and h.percentile_bound(1.0) == 20.0
+    with pytest.raises(ValueError, match="identical boundaries"):
+        h.merge(Histogram("other", boundaries=(1.0, 2.0)))
 
 
 def test_prometheus_text_and_rows(tmp_path):

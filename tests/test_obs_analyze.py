@@ -1,0 +1,556 @@
+"""repro.obs.analyze test lanes.
+
+The tentpole contracts, each pinned here:
+
+  * **attribution is exact**: per-run aggregates recomputed from spans
+    alone equal ``Telemetry.summary()`` float-for-float (same
+    p50/p90/p99/mean completion, same wait stats, same miss counts) —
+    the spans carry the same values in the same completion order;
+  * **phases decompose**: ``sojourn = queue_wait + service + transfer +
+    residual`` within 1e-9 on random traced runs, both engines
+    (hypothesis property);
+  * **diff is a true zero test**: ``diff(run, run)`` — and
+    event-vs-fleet on identical seeds — is identically zero (every
+    delta 0.0, every K-S statistic 0.0, no unmatched tasks);
+  * **sketches are accurate**: streaming p99 within 2% relative error
+    of the exact ``np.percentile`` on ≥10⁴-sample streams, mergeable,
+    bounded, exact when small;
+  * **the gate has teeth**: ``regress`` exits 0 on the committed
+    baselines (selftest) and non-zero on a synthetically perturbed
+    copy;
+  * **miss classification is stable**: golden-file pin of the
+    classifier on a saturating MMPP run.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis_shim import given, settings, st
+
+from repro import sim
+from repro.core import offload as off
+from repro.core import scheduler as sch
+from repro.hw import EDGE_DEVICES, get_device
+from repro.obs import MetricsRegistry, Tracer, postmortem_dump
+from repro.obs.analyze import (MISS_CAUSES, QuantileSketch, TraceTable,
+                               attribute, compare_rows, diff,
+                               ks_statistic, load, selftest)
+from repro.obs.analyze.cli import main as analyze_main
+
+SPECS = list(EDGE_DEVICES.values())
+REPO = pathlib.Path(__file__).resolve().parent.parent
+GOLDEN = pathlib.Path(__file__).resolve().parent / "golden"
+
+
+def make_tasks(n, seed=3, deadline_slack=None):
+    rng = np.random.default_rng(seed)
+    return [sch.Task(f"t{i}", flops=float(rng.uniform(1e9, 5e11)),
+                     input_bytes=float(rng.uniform(1e4, 1e7)),
+                     deadline_s=float(rng.uniform(*deadline_slack))
+                     if deadline_slack else None)
+            for i in range(n)]
+
+
+def make_nodes(n):
+    return [sch.Node(SPECS[j % len(SPECS)]) for j in range(n)]
+
+
+def run_traced(engine, *, n_tasks=40, n_nodes=3, seed=5,
+               contended=True, deadlines=True):
+    """One traced simulate_stream run -> (Telemetry, Tracer)."""
+    tasks = make_tasks(n_tasks, seed=seed,
+                       deadline_slack=(0.05, 2.0) if deadlines else None)
+    arrivals = sim.poisson_arrivals(15.0, n=n_tasks, seed=seed)
+    kw = {}
+    if contended:
+        kw["pools"] = sim.NodePools.uniform(n_nodes, 1)
+        kw["rtt"] = sim.WeibullRTT(shape=0.7, scale=0.01, seed=seed + 9)
+    obs = Tracer()
+    tel = sim.simulate_stream(tasks, arrivals, make_nodes(n_nodes),
+                              policy="min_min", engine=engine, obs=obs,
+                              **kw)
+    return tel, obs
+
+
+# --------------------------------------------------------------------------
+# attribution: exact summary reproduction from spans alone
+# --------------------------------------------------------------------------
+EXACT_KEYS = ("n_tasks", "p50_completion_s", "p90_completion_s",
+              "p99_completion_s", "mean_completion_s", "p99_wait_s",
+              "mean_wait_s", "deadline_misses", "miss_rate")
+
+
+@pytest.mark.parametrize("engine", ["event", "fleet"])
+def test_attribution_reproduces_summary_exactly(engine):
+    tel, obs = run_traced(engine)
+    s_span = attribute(obs).summary()
+    s_tel = tel.summary()
+    for k in EXACT_KEYS:
+        assert s_span[k] == s_tel[k], (k, s_span[k], s_tel[k])
+
+
+@pytest.mark.parametrize("engine", ["event", "fleet"])
+def test_attribution_phase_totals_and_critical_path(engine):
+    tel, obs = run_traced(engine)
+    run = attribute(obs)
+    totals = run.phase_totals()
+    assert totals["sojourn"] == pytest.approx(
+        totals["queue_wait"] + totals["service"] + totals["transfer"]
+        + totals["residual"])
+    shares = run.phase_shares()
+    assert sum(shares.values()) == pytest.approx(1.0)
+    # per-node roll-up covers every task exactly once
+    assert sum(d["n_tasks"] for d in run.by_track().values()) \
+        == len(run.tasks)
+    # critical paths cover each sojourn, ordered and gap-free
+    for i in range(len(run.tasks)):
+        segs = run.critical_path(i)
+        assert segs, "no critical path for a completed task"
+        assert sum(d for _, d, _ in segs) == pytest.approx(
+            float(run.tasks.sojourn_s[i]))
+        assert run.dominant_phase(i) == max(
+            segs, key=lambda s: s[1])[0]
+
+
+@settings(max_examples=12, deadline=None)
+@given(engine=st.sampled_from(["event", "fleet"]),
+       seed=st.integers(0, 50), n_tasks=st.integers(5, 30),
+       contended=st.booleans())
+def test_phases_sum_to_sojourn_property(engine, seed, n_tasks,
+                                        contended):
+    _, obs = run_traced(engine, n_tasks=n_tasks, seed=seed,
+                        contended=contended)
+    t = attribute(obs).tasks
+    assert len(t) == n_tasks
+    recon = t.queue_wait_s + t.service_s + t.transfer_s + t.residual_s
+    assert np.abs(t.sojourn_s - recon).max() <= 1e-9
+    # residual is float residue, not a real phase
+    assert np.abs(t.residual_s).max() <= 1e-9
+    # phase matrix agrees with the columns
+    assert np.abs(t.phase_matrix().sum(axis=1)
+                  - t.sojourn_s).max() <= 1e-9
+
+
+def test_telemetry_bridge_matches_tracer_phases():
+    tel, obs = run_traced("event")
+    via_rows = tel.attribution()
+    via_spans = attribute(obs)
+    assert len(via_rows.tasks) == len(via_spans.tasks)
+    # same completion order, same records -> identical phase columns
+    np.testing.assert_array_equal(via_rows.tasks.sojourn_s,
+                                  via_spans.tasks.sojourn_s)
+    np.testing.assert_array_equal(via_rows.tasks.queue_wait_s,
+                                  via_spans.tasks.queue_wait_s)
+    np.testing.assert_array_equal(via_rows.tasks.transfer_s,
+                                  via_spans.tasks.transfer_s)
+
+
+def test_summary_new_keys():
+    tel, _ = run_traced("event")
+    s = tel.summary()
+    soj = sorted(r.sojourn_s for r in tel.records)
+    assert s["p90_completion_s"] == float(np.percentile(soj, 90))
+    assert s["miss_rate"] == s["deadline_misses"] / s["n_tasks"]
+    assert sim.Telemetry().summary()["miss_rate"] == 0.0
+
+
+# --------------------------------------------------------------------------
+# differential profiling
+# --------------------------------------------------------------------------
+def test_diff_run_with_itself_is_identically_zero():
+    _, obs = run_traced("event")
+    for align in ("task", "arrival"):
+        rep = diff(obs, obs, align=align)
+        assert rep.is_zero
+        assert rep.only_a == rep.only_b == 0
+        for p in rep.phases.values():
+            assert (p.mean_delta, p.p50_delta, p.p90_delta,
+                    p.p99_delta, p.ks) == (0.0,) * 5
+        assert all(r["sojourn_delta_s"] == 0.0
+                   for r in rep.top_regressions)
+
+
+def test_diff_event_vs_fleet_identical_seeds_all_zero():
+    _, obs_e = run_traced("event")
+    _, obs_f = run_traced("fleet")
+    rep = diff(obs_e, obs_f)
+    assert rep.is_zero, rep.table_str()
+
+
+def test_diff_detects_regression():
+    _, a = run_traced("event", seed=5)
+    _, b = run_traced("event", seed=6)     # different run: must move
+    rep = diff(a, b)
+    assert not rep.is_zero
+    assert rep.matched == len(load(a).lifecycles())
+    d = rep.to_dict()
+    assert set(d["phases"]) == {"sojourn", "queue_wait", "service",
+                                "transfer"}
+    assert "diff" in rep.table_str()
+
+
+def test_ks_statistic_properties():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=500)
+    assert ks_statistic(x, x) == 0.0
+    # disjoint supports -> maximal distance
+    assert ks_statistic(x, x + 100.0) == 1.0
+    # shifted distributions are detectably apart
+    assert 0.0 < ks_statistic(x, x + 0.5) < 1.0
+    assert ks_statistic(np.empty(0), np.empty(0)) == 0.0
+    assert ks_statistic(np.empty(0), x) == 1.0
+
+
+# --------------------------------------------------------------------------
+# streaming quantile sketch
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dist", ["lognormal", "uniform", "exponential",
+                                  "bimodal"])
+def test_sketch_p99_within_2pct(dist):
+    rng = np.random.default_rng(42)
+    n = 20_000
+    x = {"lognormal": lambda: rng.lognormal(0.0, 1.0, n),
+         "uniform": lambda: rng.uniform(0.0, 10.0, n),
+         "exponential": lambda: rng.exponential(2.0, n),
+         "bimodal": lambda: np.concatenate(
+             [rng.normal(1.0, 0.1, n // 2),
+              rng.normal(10.0, 1.0, n // 2)])}[dist]()
+    s = QuantileSketch("lat")
+    # streamed in chunks, as a serving loop would
+    for chunk in np.array_split(x, 37):
+        s.observe_many(chunk)
+    assert s.n_centroids <= 128
+    assert len(s) == x.size and s.sum == pytest.approx(x.sum())
+    for q in (0.5, 0.9, 0.99):
+        exact = float(np.percentile(x, 100 * q))
+        assert abs(s.quantile(q) - exact) <= 0.02 * abs(exact), (q, dist)
+    # extremes are exact
+    assert s.quantile(0.0) == x.min() and s.quantile(1.0) == x.max()
+
+
+def test_sketch_exact_when_small():
+    x = np.asarray([3.0, 1.0, 4.0, 1.5, 9.0])
+    s = QuantileSketch(max_centroids=16)
+    s.observe_many(x)
+    assert s.quantile(0.0) == 1.0 and s.quantile(1.0) == 9.0
+    assert s.quantile(0.5) == pytest.approx(np.percentile(x, 50), rel=0.3)
+    assert s.mean == pytest.approx(x.mean())
+
+
+def test_sketch_merge_approximates_union():
+    rng = np.random.default_rng(1)
+    a, b = rng.lognormal(0, 1, 8000), rng.lognormal(0.5, 0.8, 8000)
+    sa, sb = QuantileSketch("a"), QuantileSketch("b")
+    sa.observe_many(a)
+    sb.observe_many(b)
+    sa.merge(sb)
+    both = np.concatenate([a, b])
+    assert len(sa) == both.size
+    assert sa.sum == pytest.approx(both.sum())
+    for q in (0.5, 0.99):
+        exact = float(np.percentile(both, 100 * q))
+        assert abs(sa.quantile(q) - exact) <= 0.02 * abs(exact)
+
+
+def test_sketch_validations():
+    s = QuantileSketch()
+    with pytest.raises(ValueError, match="non-finite"):
+        s.observe(float("nan"))
+    with pytest.raises(ValueError, match="q must be"):
+        s.quantile(1.5)
+    with pytest.raises(ValueError, match="max_centroids"):
+        QuantileSketch(max_centroids=2)
+    assert s.quantile(0.5) == 0.0          # empty sketch
+
+
+def test_registry_summary_kind():
+    reg = MetricsRegistry()
+    q = reg.quantile("sojourn_seconds", help="live sojourn")
+    assert q is reg.quantile("sojourn_seconds")      # idempotent
+    q.observe_many(np.arange(1.0, 101.0))
+    text = reg.to_prometheus()
+    assert "# TYPE sojourn_seconds summary" in text
+    assert 'sojourn_seconds{quantile="0.99"}' in text
+    assert "sojourn_seconds_count 100" in text
+    rows = reg.to_rows()
+    (srow,) = [r for r in rows if "quantiles" in r]
+    assert srow["count"] == 100 and "0.99" in srow["quantiles"]
+    with pytest.raises(TypeError, match="already registered"):
+        reg.counter("sojourn_seconds")
+    with pytest.raises(ValueError, match="max_centroids"):
+        reg.quantile("sojourn_seconds", max_centroids=64)
+
+
+def test_serving_engines_expose_live_quantiles():
+    # the wiring seam, without a model: engines register their sketches
+    # at construction; here we mimic the completion path's observes
+    reg = MetricsRegistry()
+    soj = reg.quantile("serve_sojourn_seconds")
+    rng = np.random.default_rng(3)
+    soj.observe_many(rng.exponential(0.1, 500))
+    text = reg.to_prometheus()
+    assert 'serve_sojourn_seconds{quantile="0.5"}' in text
+    import inspect
+    from repro.serve.continuous import ContinuousBatchEngine
+    from repro.serve.engine import ServeEngine
+    assert "metrics" in inspect.signature(
+        ContinuousBatchEngine.__init__).parameters
+    assert "metrics" in inspect.signature(ServeEngine.__init__).parameters
+
+
+# --------------------------------------------------------------------------
+# miss attribution: taxonomy + golden pin on a saturating MMPP run
+# --------------------------------------------------------------------------
+def _mmpp_saturating_run():
+    """A deliberately saturated run: bursty MMPP arrivals into
+    capacity-1 pools with heavy-tailed RTT and tight absolute
+    deadlines — misses from contention AND from the RTT tail."""
+    n_nodes = 3
+    arrivals = sim.mmpp_arrivals([40.0, 400.0], [0.5, 0.2],
+                                 horizon=2.0, seed=11)
+    rng = np.random.default_rng(11)
+    tasks = [sch.Task(f"t{i}", flops=float(rng.uniform(1e9, 2e11)),
+                      input_bytes=float(rng.uniform(1e4, 1e6)),
+                      deadline_s=float(arrivals[i]
+                                       + rng.uniform(0.005, 0.3)))
+             for i in range(len(arrivals))]
+    obs = Tracer()
+    tel = sim.simulate_stream(
+        tasks, arrivals, make_nodes(n_nodes), policy="min_min",
+        pools=sim.NodePools.uniform(n_nodes, 1),
+        rtt=sim.WeibullRTT(shape=0.6, scale=0.02, seed=13),
+        engine="event", obs=obs)
+    return tel, obs
+
+
+def test_miss_attribution_taxonomy():
+    tel, obs = run_traced("event", n_tasks=60, seed=9)
+    ma = attribute(obs).miss_attribution()
+    assert ma["n_misses"] == tel.summary()["deadline_misses"]
+    assert sum(ma["by_cause"].values()) == ma["n_misses"]
+    assert set(ma["by_cause"]) == set(MISS_CAUSES)
+    for m in ma["misses"]:
+        assert m["cause"] in MISS_CAUSES
+        assert m["excess_s"] > 0.0
+        assert m["dominant_phase"] in ("queue_wait", "transfer",
+                                       "service")
+        # cause follows the dominant phase
+        assert {"queue_wait": "pool_contention",
+                "transfer": m["cause"],     # link_drift or rtt_tail
+                "service": "service_underprediction"}[
+                    m["dominant_phase"]] == m["cause"]
+
+
+def test_miss_attribution_golden_mmpp():
+    _, obs = _mmpp_saturating_run()
+    ma = attribute(obs).miss_attribution()
+    got = {
+        "n_tasks": ma["n_tasks"], "n_misses": ma["n_misses"],
+        "by_cause": ma["by_cause"],
+        "misses": [{"task": m["task"], "cause": m["cause"],
+                    "dominant_phase": m["dominant_phase"]}
+                   for m in ma["misses"]],
+    }
+    path = GOLDEN / "miss_attribution_mmpp.json"
+    want = json.loads(path.read_text())
+    assert got == want, (
+        "miss classifier drifted from the golden file; if the change "
+        "is intentional, regenerate tests/golden/"
+        "miss_attribution_mmpp.json")
+    # the saturating run must actually exercise the classifier
+    assert ma["n_misses"] >= 5
+    assert ma["by_cause"]["pool_contention"] >= 1
+
+
+def test_instant_corroboration_windows():
+    tr = Tracer()
+    tr.task_spans("n@0", 0, "a", 0.0, 0.9, 1.0,
+                  args={"deadline_s": 0.5})
+    tr.task_spans("n@0", 1, "b", 0.0, 0.0, 0.6)
+    tr.instant("scheduler", "pool_saturation", 0.4)
+    run = attribute(tr)
+    (miss,) = run.miss_attribution()["misses"]
+    assert miss["cause"] == "pool_contention"
+    assert miss["corroborated"] and miss["evidence"] == [
+        "pool_saturation"]
+    table = run.table.instants_in(0.0, 1.0, names=("pool_saturation",))
+    assert len(table) == 1
+    assert run.table.instants_in(0.5, 1.0) == []
+
+
+# --------------------------------------------------------------------------
+# trace table ingestion paths
+# --------------------------------------------------------------------------
+def test_from_chrome_round_trip(tmp_path):
+    _, obs = run_traced("event", n_tasks=20)
+    path = tmp_path / "trace.json"
+    obs.export_chrome(str(path))
+    t_exact = TraceTable.from_tracer(obs).lifecycles()
+    t_chrome = load(str(path)).lifecycles()
+    assert len(t_chrome) == len(t_exact)
+    # µs round-trip: endpoints within 1e-9 s of the exact floats
+    np.testing.assert_allclose(t_chrome.sojourn_s, t_exact.sojourn_s,
+                               atol=1e-9)
+    np.testing.assert_allclose(t_chrome.queue_wait_s,
+                               t_exact.queue_wait_s, atol=1e-9)
+    assert t_chrome.task == t_exact.task
+    # deadline args survive the export
+    assert np.isfinite(t_chrome.deadline_s).all()
+
+
+def test_span_arrays_args_cols():
+    tr = Tracer()
+    tr.span_arrays(["n@0", "n@1"], [0, 1], ["x", "y"], [0.0, 1.0],
+                   [0.1, 1.0], [0.5, 2.0],
+                   args_cols={"deadline_s": [0.4, None],
+                              "split": [3, None]})
+    t = load(tr).lifecycles()
+    assert t.deadline_s[0] == 0.4 and np.isnan(t.deadline_s[1])
+    assert t.split[0] == 3 and t.split[1] == -1
+    assert bool(t.missed[0]) and not bool(t.missed[1])
+    with pytest.raises(ValueError, match="args column"):
+        tr.span_arrays(["n@0"], [0], ["x"], [0.0], [0.0], [1.0],
+                       args_cols={"deadline_s": [1.0, 2.0]})
+
+
+# --------------------------------------------------------------------------
+# regression gating
+# --------------------------------------------------------------------------
+def test_compare_rows_directions():
+    base = [{"name": "b", "us_per_call": 100.0, "events_per_sec": 1e4,
+             "rel_err": 0.01, "backend": "jax", "n_envs": 64}]
+    assert compare_rows(base, base).ok
+    # lower-better regression flags; improvement doesn't
+    worse = [{**base[0], "us_per_call": 130.0}]
+    rep = compare_rows(base, worse)
+    assert not rep.ok and rep.regressions[0].metric == "us_per_call"
+    better = [{**base[0], "us_per_call": 50.0, "events_per_sec": 9e4}]
+    rep = compare_rows(base, better)
+    assert rep.ok and len(rep.improvements) == 2
+    # higher-better regression flags
+    rep = compare_rows(base, [{**base[0], "events_per_sec": 100.0}])
+    assert not rep.ok
+    # config change flags
+    rep = compare_rows(base, [{**base[0], "backend": "numpy"}])
+    assert not rep.ok
+    # missing row fails, extra row doesn't
+    rep = compare_rows(base, [{"name": "other", "us_per_call": 1.0}])
+    assert not rep.ok and rep.missing_rows == ["b"]
+    assert rep.extra_rows == ["other"]
+    # per-metric tolerance override
+    rep = compare_rows(base, worse, tol={"us_per_call": 0.5})
+    assert rep.ok
+    rep = compare_rows(base, worse, tol={"b.us_per_call": 0.5})
+    assert rep.ok
+
+
+def test_selftest_on_committed_baselines():
+    from repro.obs.analyze.regress import load_rows
+    ok, text = selftest(load_rows(str(REPO / "BENCH_7.json")))
+    assert ok, text
+    assert "selftest PASS" in text
+
+
+@pytest.mark.parametrize("bench", ["BENCH_3.json", "BENCH_6.json"])
+def test_regress_cli_exit_codes(bench, tmp_path, capsys):
+    base = str(REPO / bench)
+    # committed baseline vs itself: clean gate, exit 0
+    assert analyze_main(["regress", base, base]) == 0
+    # selftest mode: exit 0, proves perturbations are caught
+    assert analyze_main(["regress", base, "--selftest"]) == 0
+    # synthetically perturbed copy: exit 1
+    rows = json.loads(pathlib.Path(base).read_text())
+    for r in rows:
+        for k, v in list(r.items()):
+            if isinstance(v, float) and v != 0:
+                r[k] = v * 2.0 if not any(
+                    s in k for s in ("per_sec", "per_s", "speedup")) \
+                    else v / 2.0
+    bad = tmp_path / "fresh.json"
+    bad.write_text(json.dumps(rows))
+    assert analyze_main(["regress", base, str(bad)]) == 1
+    # IO error: exit 2
+    assert analyze_main(["regress", base,
+                         str(tmp_path / "nope.json")]) == 2
+    capsys.readouterr()
+
+
+def test_regress_cli_json_report(tmp_path, capsys):
+    base = str(REPO / "BENCH_7.json")
+    out = tmp_path / "report.json"
+    assert analyze_main(["regress", base, base,
+                         "--json", str(out)]) == 0
+    rep = json.loads(out.read_text())
+    assert rep["ok"] and rep["checked"] > 0
+    capsys.readouterr()
+
+
+# --------------------------------------------------------------------------
+# CLI: attribution + diff on exported traces
+# --------------------------------------------------------------------------
+def test_cli_attribution_and_diff(tmp_path, capsys):
+    _, obs_a = run_traced("event", n_tasks=20)
+    _, obs_b = run_traced("fleet", n_tasks=20)
+    pa, pb = tmp_path / "a.json", tmp_path / "b.json"
+    obs_a.export_chrome(str(pa))
+    obs_b.export_chrome(str(pb))
+    out = tmp_path / "attr.json"
+    assert analyze_main(["attribution", str(pa), "--misses",
+                         "--json", str(out)]) == 0
+    report = json.loads(out.read_text())
+    assert report["summary"]["n_tasks"] == 20
+    assert set(report["miss_attribution"]["by_cause"]) \
+        == set(MISS_CAUSES)
+    dout = tmp_path / "diff.json"
+    assert analyze_main(["diff", str(pa), str(pb),
+                         "--json", str(dout)]) == 0
+    d = json.loads(dout.read_text())
+    # same seeds through both engines, µs round-trip: deltas ≈ 0
+    assert d["matched"] == 20
+    assert abs(d["phases"]["sojourn"]["mean_delta"]) < 1e-6
+    assert analyze_main(["attribution",
+                         str(tmp_path / "missing.json")]) == 2
+    capsys.readouterr()
+
+
+# --------------------------------------------------------------------------
+# flight-recorder post-mortem
+# --------------------------------------------------------------------------
+def test_postmortem_on_engine_crash(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+
+    class BoomRTT:
+        def sample(self, n):
+            raise RuntimeError("boom")
+
+    tasks = make_tasks(1, deadline_slack=(0.5, 1.0))
+    nodes = make_nodes(1)
+    obs = Tracer()
+    with pytest.raises(RuntimeError, match="boom"):
+        sim.simulate_stream(tasks, np.asarray([0.0]), nodes,
+                            rtt=BoomRTT(), obs=obs)
+    dump = json.loads(
+        (tmp_path / "results" / "postmortem.json").read_text())
+    assert dump["error"].startswith("RuntimeError")
+    assert dump["n_events"] >= 1
+    assert "post-mortem" in capsys.readouterr().err
+    # tracing off: the crash still propagates, nothing is written
+    (tmp_path / "results" / "postmortem.json").unlink()
+    with pytest.raises(RuntimeError, match="boom"):
+        sim.simulate_stream(tasks, np.asarray([0.0]), nodes,
+                            rtt=BoomRTT())
+    assert not (tmp_path / "results" / "postmortem.json").exists()
+
+
+def test_postmortem_dump_is_best_effort(tmp_path):
+    tr = Tracer()
+    tr.instant("x", "e", 1.0)
+    # unwritable path: swallowed, returns None, no raise
+    assert postmortem_dump(tr, clock_s=1.0,
+                           path="/proc/nope/postmortem.json") is None
+    out = tmp_path / "pm.json"
+    d = postmortem_dump(tr, clock_s=2.5, error="E", path=str(out))
+    assert d["clock_s"] == 2.5 and out.exists()
